@@ -1,0 +1,94 @@
+"""Framework-overhead microbenchmarks -- the paper's 'lightweight' claim.
+
+Emits `name,us_per_call,derived` rows: worker selection over large fleets,
+aggregation of real-size models, warehouse pointer ops, int8 compression."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, selection
+from repro.core.cost_model import WorkerStats
+from repro.core.warehouse import DataWarehouse
+
+
+def _time(fn, n=20, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_selection(n_workers: int):
+    rng = np.random.default_rng(0)
+    stats = {i: WorkerStats(i, float(rng.uniform(1, 10)),
+                            float(rng.uniform(0.1, 1)), int(rng.integers(1, 100)))
+             for i in range(n_workers)}
+    st1 = selection.RMinRMaxState(2, 4)
+    st2 = selection.TimeBasedState(T=20.0, r=2)
+    us1 = _time(lambda: selection.rmin_rmax_select(stats, st1))
+    us2 = _time(lambda: selection.time_based_select(stats, st2))
+    print(f"selection.rmin_rmax.{n_workers}w,{us1:.1f},us_per_round")
+    print(f"selection.time_based.{n_workers}w,{us2:.1f},us_per_round")
+
+
+def bench_aggregation(n_params: int, k: int):
+    trees = [{"w": jnp.ones((n_params,), jnp.float32) * i}
+             for i in range(k)]
+    w = np.full(k, 1.0 / k)
+    fn = jax.jit(lambda ts: aggregation.weighted_average(ts, w))
+    fn(trees)["w"].block_until_ready()
+    us = _time(lambda: fn(trees)["w"].block_until_ready(), n=10)
+    gbps = n_params * 4 * k / (us / 1e6) / 1e9
+    print(f"aggregation.fedavg.{k}x{n_params//1000}k,{us:.1f},{gbps:.2f}GBps")
+
+
+def bench_kernel_agg(n_params: int, k: int):
+    from repro.kernels.fed_agg.ops import fed_agg
+    x = jnp.ones((k, n_params), jnp.float32)
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    fed_agg(x, w).block_until_ready()
+    us = _time(lambda: fed_agg(x, w).block_until_ready(), n=10)
+    print(f"kernel.fed_agg.{k}x{n_params//1000}k,{us:.1f},interpret_mode")
+
+
+def bench_warehouse():
+    wh = DataWarehouse()
+    tree = {"w": jnp.ones((250_000,), jnp.float32)}
+    us_put = _time(lambda: wh.put(tree), n=20)
+    ptr = wh.put(tree)
+    us_get = _time(lambda: wh.get(ptr.uid), n=50)
+    us_cred = _time(lambda: wh.fetch(wh.issue_credential(ptr.uid)), n=50)
+    print(f"warehouse.put.1MB,{us_put:.1f},pointer_store")
+    print(f"warehouse.get.1MB,{us_get:.1f},pointer_fetch")
+    print(f"warehouse.credential_fetch.1MB,{us_cred:.1f},one_time_token")
+
+
+def bench_compression():
+    from repro.core import compression
+    x = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(1 << 20,)),
+                          jnp.float32)}
+    fn = jax.jit(lambda t: compression.quantize_blockwise(t["w"], block=256))
+    jax.block_until_ready(fn(x))
+    us = _time(lambda: jax.block_until_ready(fn(x)), n=10)
+    ratio = compression.compressed_bytes(x) / (x["w"].size * 4)
+    print(f"compression.int8.4MB,{us:.1f},ratio={ratio:.3f}")
+
+
+def main():
+    print("name,us_per_call,derived")
+    for n in (100, 1000, 10000):
+        bench_selection(n)
+    bench_aggregation(1 << 20, 10)
+    bench_kernel_agg(1 << 18, 8)
+    bench_warehouse()
+    bench_compression()
+
+
+if __name__ == "__main__":
+    main()

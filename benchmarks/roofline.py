@@ -1,0 +1,128 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json and emits the
+EXPERIMENTS.md SSRoofline tables (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, memory fit).
+
+Conventions (see DESIGN.md SS5 + dist/hlo_cost.py):
+  * flops/bytes/collective are PER DEVICE from the trip-count-aware HLO
+    cost model (XLA's cost_analysis counts scan bodies once -- unusable);
+  * MODEL_FLOPS = 6*N*D (train) or 2*N*D (decode/prefill forward), N_active
+    for MoE, D = tokens processed per step;
+  * hardware: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI per chip.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.dist.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_ART_ROOT = Path(__file__).resolve().parents[1] / "artifacts"
+# read the optimized sweep when present, else the baseline sweep
+ARTIFACTS = (_ART_ROOT / "dryrun_opt") if (_ART_ROOT / "dryrun_opt").exists() \
+    else (_ART_ROOT / "dryrun")
+
+SHAPE_TOKENS = {  # (tokens per step, flops multiplier per param per token)
+    "train_4k": (4096 * 256, 6),
+    "prefill_32k": (32768 * 32, 2),
+    "decode_32k": (1 * 128, 2),
+    "long_500k": (1 * 1, 2),
+}
+
+
+def model_flops(rec: dict) -> float:
+    toks, mult = SHAPE_TOKENS[rec["shape"]]
+    return mult * rec["n_active_params"] * toks
+
+
+def load_cells(mesh: str = "single", tag: str | None = None):
+    rows = []
+    suffix = f"__{mesh}" + (f"__{tag}" if tag else "") + ".json"
+    for f in sorted(ARTIFACTS.glob(f"*{suffix}")):
+        if tag is None and f.name.count("__") != 2:
+            continue
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def chips(rec) -> int:
+    n = 1
+    for v in rec["mesh_shape"].values():
+        n *= v
+    return n
+
+
+def cell_row(rec: dict, entry_name: str | None = None) -> dict | None:
+    if rec["status"] == "skipped":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": "skipped",
+                "reason": rec.get("reason", "")[:60]}
+    if rec["status"] != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": "error"}
+    entry_name = entry_name or {
+        "train_4k": "train_step", "prefill_32k": "prefill_step",
+        "decode_32k": "decode_step", "long_500k": "decode_step",
+    }[rec["shape"]]
+    e = rec["entries"][entry_name]
+    hc = e["hlo_cost"]
+    t_c = hc["flops"] / PEAK_FLOPS_BF16
+    t_m = hc["hbm_bytes"] / HBM_BW
+    t_x = hc["collective_bytes"] / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec)
+    n_chips = chips(rec)
+    useful = mf / n_chips / max(hc["flops"], 1e-9)
+    mem = e.get("memory_analysis", {})
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok", "entry": entry_name,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom, "bound_s": max(t_c, t_m, t_x),
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_fraction": t_c / max(t_c, t_m, t_x) * useful,
+        "hbm_gb_per_dev": (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)) / 1e9,
+        "coll_by_op": {k: round(v / 1e9, 2)
+                       for k, v in hc["collective_by_op"].items()},
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful FLOPs | roofline frac | mem GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                       f"{r['status']}: {r.get('reason','')} | -- | -- | -- |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['hbm_gb_per_dev']:.1f} |\n")
+    return "".join(out)
+
+
+def main():
+    print("name,us_per_call,derived")
+    for mesh in ("single", "multi"):
+        for rec in load_cells(mesh):
+            r = cell_row(rec)
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                print(f"roofline.{r['arch']}.{r['shape']}.{mesh},0,"
+                      f"{r['status']}")
+                continue
+            print(f"roofline.{r['arch']}.{r['shape']}.{mesh},"
+                  f"{r['bound_s']*1e6:.0f},"
+                  f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
+                  f"frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

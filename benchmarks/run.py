@@ -1,0 +1,47 @@
+"""Benchmark driver: one bench per paper figure/table + framework overhead
++ the roofline reader.  Prints ``name,us_per_call,derived`` CSV rows plus
+per-figure curve/summary rows."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig12,...,fig18,overhead,roofline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from benchmarks import (beyond_fedopt, fig12_sequential_vs_fl,
+                            fig13_even_vs_uneven, fig14_random_vs_sequential,
+                            fig15_rminmax, fig16_rmax_init, fig17_alg2_sync,
+                            fig18_async, overhead, roofline)
+    benches = {
+        "fig12": fig12_sequential_vs_fl.main,
+        "fig13": fig13_even_vs_uneven.main,
+        "fig14": fig14_random_vs_sequential.main,
+        "fig15": fig15_rminmax.main,
+        "fig16": fig16_rmax_init.main,
+        "fig17": fig17_alg2_sync.main,
+        "fig18": fig18_async.main,
+        "fedopt": beyond_fedopt.main,
+        "overhead": overhead.main,
+        "roofline": roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except FileNotFoundError as e:
+            print(f"skip,{name},missing_artifacts,{e}")
+        print(f"bench.{name},{(time.time()-t0)*1e6:.0f},wall_us", flush=True)
+
+
+if __name__ == "__main__":
+    main()

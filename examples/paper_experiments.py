@@ -1,0 +1,21 @@
+"""Reproduce the paper's experiment suite (Figs. 12-18) end to end.
+
+  PYTHONPATH=src python examples/paper_experiments.py            # all
+  PYTHONPATH=src python examples/paper_experiments.py fig18      # one
+
+Prints curve CSV + the two headline metrics (worker selection vs
+sequential ~34%, async vs sync ~64%)."""
+import sys
+
+from benchmarks import run as bench_run
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else \
+        "fig12,fig13,fig14,fig15,fig16,fig17,fig18"
+    sys.argv = ["paper_experiments", "--only", only]
+    bench_run.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a batch of prompts and decode greedily
+with the KV/state-cache serve path (works for every assigned architecture).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch falcon-mamba-7b
+  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:] or ["--arch", "falcon-mamba-7b", "--batch", "4",
+                            "--prompt-len", "64", "--gen", "24"]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver: federated pretraining of a ~100M-param LM.
+
+Two FL islands train a granite-family decoder on disjoint token streams,
+exchanging weights every 5 steps through the Tier-B mixing collective,
+with checkpoints + straggler-aware selection -- the production train loop
+at CPU-runnable scale.
+
+Defaults are CPU-friendly (~10M params, 60 steps, minutes); pass
+--hundred-m for the full ~100M/300-step run (same code path, longer).
+
+  PYTHONPATH=src python examples/train_lm_federated.py
+  PYTHONPATH=src python examples/train_lm_federated.py --hundred-m
+"""
+import argparse
+import dataclasses
+import sys
+
+import repro.configs.granite_20b as granite
+from repro.launch import train as train_launcher
+from repro.configs import get_smoke_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        # ~100M decoder: 12L x 768 x 12H, 32k vocab
+        cfg = dataclasses.replace(
+            get_smoke_config("granite-20b"),
+            num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=3072, vocab_size=32_768, remat=True)
+        steps = args.steps or 300
+        batch, seq = 8, 256
+    else:
+        cfg = dataclasses.replace(
+            get_smoke_config("granite-20b"),
+            num_layers=6, d_model=256, num_heads=8, num_kv_heads=2,
+            head_dim=32, d_ff=1024, vocab_size=8_192)
+        steps = args.steps or 60
+        batch, seq = 8, 128
+
+    # register the custom config under a temp name by monkeypatching the
+    # launcher's config lookup (the launcher otherwise uses the registry)
+    import repro.launch.train as T
+    orig = T.get_smoke_config
+    T.get_smoke_config = lambda name: cfg
+    try:
+        argv = ["--arch", "custom-lm", "--smoke", "--steps", str(steps),
+                "--islands", "2", "--local-steps", "5",
+                "--batch", str(batch), "--seq", str(seq),
+                "--ckpt-dir", "/tmp/flight_lm_ckpt", "--ckpt-every", "25"]
+        if args.resume:
+            argv.append("--resume")
+        T.main(argv)
+    finally:
+        T.get_smoke_config = orig
+
+
+if __name__ == "__main__":
+    main()

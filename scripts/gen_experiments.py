@@ -1,0 +1,100 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts + benchmark logs."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import benchmarks.roofline as R
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def rows_for(dirname, mesh):
+    R.ARTIFACTS = ROOT / "artifacts" / dirname
+    return [R.cell_row(rec) for rec in R.load_cells(mesh)]
+
+
+def fmt_table(rows):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful | mem GB/dev |\n|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"*{r['status']}* | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_gb_per_dev']:.1f} |\n")
+    return "".join(out)
+
+
+def fl_agg_table(dirname):
+    R.ARTIFACTS = ROOT / "artifacts" / dirname
+    out = ["| arch | t_coll (ms) | t_mem (ms) | wire bytes/dev (GB) | "
+           "amortized /E=8 local steps (ms) |\n|---|---|---|---|---|\n"]
+    for rec in R.load_cells("multi"):
+        if rec["status"] != "ok" or "fl_aggregate" not in rec.get("entries", {}):
+            continue
+        e = rec["entries"]["fl_aggregate"]
+        if "roofline" not in e:
+            continue
+        r = e["roofline"]
+        out.append(
+            f"| {rec['arch']} | {r['t_collective_s']*1e3:.1f} | "
+            f"{r['t_memory_s']*1e3:.1f} | "
+            f"{e['hlo_cost']['collective_bytes']/1e9:.2f} | "
+            f"{r['t_collective_s']*1e3/8:.1f} |\n")
+    return "".join(out)
+
+
+def bench_lines(path="bench_output.txt", kinds=("summary", "tta",
+                                                   "policy", "best")):
+    p = Path(path)
+    if not p.exists():
+        return "*(benchmark log not present at generation time)*\n"
+    out = []
+    for line in p.read_text().splitlines():
+        if line.split(",")[0] in kinds:
+            out.append(line)
+    return "```\n" + "\n".join(out) + "\n```\n"
+
+
+def dryrun_summary(dirname):
+    R.ARTIFACTS = ROOT / "artifacts" / dirname
+    parts = []
+    for mesh in ("single", "multi"):
+        ok = skip = err = 0
+        comp = []
+        for rec in R.load_cells(mesh):
+            if rec["status"] == "ok":
+                ok += 1
+                for e in rec["entries"].values():
+                    if "compile_s" in e:
+                        comp.append(e["compile_s"])
+            elif rec["status"] == "skipped":
+                skip += 1
+            else:
+                err += 1
+        parts.append(f"  * {mesh}: {ok} compiled, {skip} documented skips, "
+                     f"{err} errors; compile time "
+                     f"min/median/max = {min(comp):.1f}/"
+                     f"{sorted(comp)[len(comp)//2]:.1f}/{max(comp):.1f}s")
+    return "\n".join(parts)
+
+
+TEMPLATE = open(ROOT / "scripts" / "experiments_template.md").read()
+
+out = TEMPLATE
+out = out.replace("{{DRYRUN_SUMMARY}}", dryrun_summary("dryrun_opt"))
+out = out.replace("{{TABLE_SINGLE_OPT}}", fmt_table(rows_for("dryrun_opt", "single")))
+out = out.replace("{{TABLE_MULTI_OPT}}", fmt_table(rows_for("dryrun_opt", "multi")))
+out = out.replace("{{TABLE_SINGLE_BASE}}", fmt_table(rows_for("dryrun", "single")))
+out = out.replace("{{FL_AGG_TABLE}}", fl_agg_table("dryrun_opt"))
+out = out.replace("{{BENCH_SUMMARIES}}", bench_lines())
+(ROOT / "EXPERIMENTS.md").write_text(out)
+print("wrote EXPERIMENTS.md", len(out), "bytes")

@@ -1,0 +1,125 @@
+"""Fault-tolerance substrate: atomic, versioned checkpoints with elastic
+re-sharding on restore.
+
+  * atomic publish: write .tmp then os.replace -- a crash mid-save can never
+    corrupt the latest checkpoint;
+  * manifest.json records step/round/FL-policy state/extra metadata;
+  * rotation keeps the newest K checkpoints;
+  * ELASTIC restore: arrays are stored logically (unsharded); `restore`
+    accepts a pytree of NamedShardings for a *different* mesh than the one
+    that saved -- grow/shrink pods without conversion tools (an FL island
+    that died simply resumes from the last aggregate, see DESIGN.md SS7).
+
+At real 1000+-node scale the store would be tensorstore/OCDBT with
+per-host shard files; the manager API is written so only save_pytree /
+load_pytree would change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _to_native(arr):
+    """npz can't store ml_dtypes (bf16/fp8): upcast to fp32 on disk; the
+    restore path casts back to the template's dtype."""
+    arr = np.asarray(arr)
+    if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+        return arr.astype(np.float32)
+    return arr
+
+
+def save_pytree(tree, path: Path):
+    """Atomic .npz save of any pytree of arrays."""
+    path = Path(path)
+    leaves, _ = jax.tree.flatten(tree)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:  # file handle: savez won't append a suffix
+        np.savez(f, **{f"a{i}": _to_native(l) for i, l in enumerate(leaves)})
+    os.replace(tmp, path)
+
+
+def load_pytree(path: Path, like_tree):
+    """Restore into the structure of `like_tree` (treedef source of truth)."""
+    _, treedef = jax.tree.flatten(like_tree)
+    with np.load(path) as z:
+        n = len([k for k in z.files if k.startswith("a")])
+        leaves = [z[f"a{i}"] for i in range(n)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ---- save ----
+    def save(self, step: int, *, params, opt_state=None, extra: Optional[dict]
+             = None):
+        ckpt = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f".tmp_step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        save_pytree(params, tmp / "params.npz")
+        if opt_state is not None:
+            save_pytree(opt_state, tmp / "opt_state.npz")
+        manifest = {"step": int(step), "time": time.time(),
+                    "extra": extra or {}}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if ckpt.exists():
+            shutil.rmtree(ckpt)
+        os.replace(tmp, ckpt)  # atomic publish
+        self._rotate()
+        return ckpt
+
+    def _rotate(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # ---- discovery ----
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ---- restore ----
+    def restore(self, *, params_like, opt_state_like=None, step: Optional[int]
+                = None, shardings=None, opt_shardings=None):
+        """Returns (step, params, opt_state, extra).  `shardings` may target
+        ANY mesh (elastic re-shard: logical arrays are device_put to the new
+        layout)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        ckpt = self.dir / f"step_{step:010d}"
+        manifest = json.loads((ckpt / "manifest.json").read_text())
+        params = load_pytree(ckpt / "params.npz", params_like)
+        params = jax.tree.map(
+            lambda arr, like: np.asarray(arr, dtype=like.dtype),
+            params, params_like)
+        if shardings is not None:
+            params = jax.tree.map(jax.device_put, params, shardings)
+        opt_state = None
+        if opt_state_like is not None and (ckpt / "opt_state.npz").exists():
+            opt_state = load_pytree(ckpt / "opt_state.npz", opt_state_like)
+            if opt_shardings is not None:
+                opt_state = jax.tree.map(jax.device_put, opt_state,
+                                         opt_shardings)
+        return step, params, opt_state, manifest.get("extra", {})

@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+Tier-A models).  `get_config(name)` returns the FULL config (dry-run only);
+`get_smoke_config(name)` returns the reduced same-family config used by CPU
+smoke tests and the FL simulator."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+
+_ARCHS = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "chatglm3-6b": "chatglm3_6b",
+    "granite-20b": "granite_20b",
+    "minitron-8b": "minitron_8b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    # the paper's own workloads (Tier-A FL experiments)
+    "flight-cnn-mnist": "flight_cnn",
+    "flight-cnn-cifar": "flight_cnn",
+}
+
+
+def _module(name: str):
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = _module(name)
+    if name == "flight-cnn-cifar":
+        return mod.CONFIG_CIFAR
+    if name == "flight-cnn-mnist":
+        return mod.CONFIG_MNIST
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = _module(name)
+    if name.startswith("flight-cnn"):
+        return get_config(name)  # already tiny
+    return mod.SMOKE
+
+
+def list_archs(assigned_only: bool = True):
+    names = [n for n in _ARCHS if not n.startswith("flight-")] if assigned_only \
+        else list(_ARCHS)
+    return names

@@ -1,0 +1,23 @@
+"""mixtral-8x22b [moe] -- 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=32768,
+    num_experts=8, experts_per_token=2, moe_d_ff=16384,
+    attention="swa", window=4096,
+    norm="rmsnorm", act="silu", rope_theta=1e6,
+    grad_accum=16,
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-8x22b-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=503,
+    num_experts=4, experts_per_token=2, moe_d_ff=96,
+    attention="swa", window=8,
+    norm="rmsnorm", act="silu", remat=False,
+)

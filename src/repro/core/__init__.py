@@ -1,0 +1,12 @@
+# FLight core: the paper's primary contribution in JAX.
+#   aggregation -- FedAvg + weighted/staleness variants + island mixing
+#   selection   -- Algorithm 1 (rmin/rmax), Algorithm 2 (time-based), baselines
+#   cost_model  -- Eq. 4 system-parameter time estimation + profiles
+#   client      -- local training on private shards
+#   server      -- versioned aggregation server + policy feedback (Eq. 1-3)
+#   events      -- discrete-event sync/async FL engine (paper experiments)
+#   federated   -- Tier B: FL as one mixing collective over the pod axis
+#   warehouse   -- pointer-addressed weight store w/ one-time credentials
+#   compression -- int8 delta compression with error feedback (beyond-paper)
+from repro.core import (aggregation, client, compression, cost_model, events,
+                        federated, selection, server, warehouse)

@@ -1,0 +1,158 @@
+"""Aggregation algorithms (paper SSII-A / SSIII-C.4).
+
+All operate on parameter pytrees.  The paper's four families:
+  * federated averaging          -- weights proportional to worker data size
+  * linear weighted averaging    -- staleness-discounted, linear decay
+  * polynomial weighted          -- (staleness+1)^-a decay
+  * exponential weighted         -- exp(-lam*staleness) decay
+plus the asynchronous single-worker merge (server folds one response into
+its model as soon as it arrives; paper SSIII-C.4: weights arriving during an
+aggregation are deferred to the next round, never dropped).
+
+Averaging is computed in fp32 regardless of the storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Weighting schemes
+# --------------------------------------------------------------------------
+
+def aggregation_weights(
+    scheme: str,
+    n_data: Sequence[float],
+    staleness: Sequence[float] | None = None,
+    *,
+    poly_a: float = 1.0,
+    exp_lam: float = 0.5,
+    lin_lam: float = 0.25,
+) -> np.ndarray:
+    """Normalised per-worker weights for one aggregation round."""
+    n = np.asarray(n_data, np.float64)
+    s = np.zeros_like(n) if staleness is None else np.asarray(staleness,
+                                                              np.float64)
+    if scheme == "uniform":
+        w = np.ones_like(n)
+    elif scheme == "fedavg":
+        w = n
+    elif scheme == "linear":
+        w = n * np.maximum(0.0, 1.0 - lin_lam * s)
+    elif scheme == "polynomial":
+        w = n * np.power(1.0 + s, -poly_a)
+    elif scheme == "exponential":
+        w = n * np.exp(-exp_lam * s)
+    else:
+        raise ValueError(f"unknown aggregation scheme '{scheme}'")
+    tot = w.sum()
+    if tot <= 0:  # every candidate fully discounted -> fall back to uniform
+        w = np.ones_like(n)
+        tot = w.sum()
+    return (w / tot).astype(np.float64)
+
+
+# --------------------------------------------------------------------------
+# Pytree merges
+# --------------------------------------------------------------------------
+
+def weighted_average(param_list, weights) -> "pytree":
+    """sum_i w_i * params_i, computed in fp32, cast back to leaf dtype."""
+    w = np.asarray(weights, np.float64)
+    assert len(param_list) == len(w) and abs(float(w.sum()) - 1.0) < 1e-6, \
+        (len(param_list), w.sum())
+
+    def merge(*leaves):
+        acc = jnp.zeros(leaves[0].shape, jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            acc = acc + jnp.float32(wi) * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(merge, *param_list)
+
+
+def async_merge(server_params, worker_params, alpha: float):
+    """M_s <- (1-a) M_s + a M_w  (asynchronous single-response fold)."""
+    a = float(alpha)
+
+    def merge(s, w_):
+        return ((1.0 - a) * s.astype(jnp.float32)
+                + a * w_.astype(jnp.float32)).astype(s.dtype)
+
+    return jax.tree.map(merge, server_params, worker_params)
+
+
+def staleness_alpha(base_alpha: float, staleness: float, *,
+                    scheme: str = "polynomial", poly_a: float = 0.5,
+                    exp_lam: float = 0.3) -> float:
+    """Mixing rate for async merges, decayed by version lag (FedAsync-style;
+    the paper's 'biased to newer versions of the aggregation server model')."""
+    s = max(0.0, float(staleness))
+    if scheme == "constant":
+        d = 1.0
+    elif scheme == "polynomial":
+        d = (1.0 + s) ** (-poly_a)
+    elif scheme == "exponential":
+        d = float(np.exp(-exp_lam * s))
+    else:
+        raise ValueError(scheme)
+    return float(base_alpha) * d
+
+
+# --------------------------------------------------------------------------
+# Mixing-matrix form (Tier B: one collective over the pod axis)
+# --------------------------------------------------------------------------
+
+def sync_mixing_matrix(weights: np.ndarray) -> np.ndarray:
+    """Every island receives the same weighted average: M = 1 w^T."""
+    w = np.asarray(weights, np.float64)
+    P = w.shape[0]
+    return np.tile(w[None, :], (P, 1))
+
+
+def async_mixing_matrix(alphas: np.ndarray, contributors: np.ndarray
+                        ) -> np.ndarray:
+    """Island i keeps (1-a_i) of itself and takes a_i of the contributor mix.
+
+    alphas: (P,) per-island mixing rates (0 => island unchanged this round);
+    contributors: (P,) nonnegative contribution weights (who is 'fresh').
+    """
+    a = np.asarray(alphas, np.float64)
+    c = np.asarray(contributors, np.float64)
+    c = c / max(c.sum(), 1e-12)
+    P = a.shape[0]
+    M = np.diag(1.0 - a) + np.outer(a, c)
+    assert np.allclose(M.sum(axis=1), 1.0)
+    return M
+
+
+def mix_islands(stacked_params, mixing: jnp.ndarray):
+    """new_i = sum_j M[i,j] params_j over the leading island axis.
+
+    Lowered inside jit this is the paper's whole weight-exchange step as ONE
+    collective over the pod axis (see core/federated.py).  bf16 leaves are
+    contracted in their STORAGE dtype with fp32 accumulation, so the pod
+    collective moves bf16 -- an upfront f32 cast doubled the exchange bytes
+    (EXPERIMENTS.md SSPerf, fl_aggregate iteration 1)."""
+
+    def mix(leaf):
+        if leaf.dtype == jnp.bfloat16:
+            # bf16 on the wire: an elementwise weighted sum (NOT a dot --
+            # dots legalise to f32 and put an f32 all-reduce on the pod
+            # axis, 2x the bytes; measured in EXPERIMENTS.md SSPerf).
+            # islands are few (P<=2 here), so bf16 accumulation is exact
+            # enough for weight averaging.
+            P = leaf.shape[0]
+            w = mixing.astype(jnp.bfloat16).reshape(
+                (P, P) + (1,) * (leaf.ndim - 1))
+            return jnp.sum(w * leaf[None], axis=1)
+        out = jnp.tensordot(mixing.astype(jnp.float32),
+                            leaf.astype(jnp.float32), axes=1)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(mix, stacked_params)

@@ -1,0 +1,95 @@
+"""FL worker: local training on a private data shard (paper SSIII-C.3).
+
+Local training is a single jitted scan over (epochs x minibatches); the
+worker never shares raw data, only the resulting weights -- the FL
+invariant.  Used by the Tier-A simulator and the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def softmax_xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def accuracy(logits, labels):
+    return (jnp.argmax(logits, axis=-1) == labels).mean()
+
+
+@dataclasses.dataclass
+class LocalTrainer:
+    """SGD-with-momentum local trainer for classifier models."""
+    model: object                 # repro.models.Model
+    lr: float = 0.05
+    momentum: float = 0.9
+    batch_size: int = 64
+
+    def __post_init__(self):
+        self._train = jax.jit(self._train_impl, static_argnames=("epochs",))
+        self._eval = jax.jit(self._eval_impl)
+
+    def _loss(self, params, images, labels):
+        logits, aux = self.model.apply(params, {"images": images},
+                                       mode="train")
+        return softmax_xent(logits, labels) + 0.01 * aux
+
+    def _train_impl(self, params, images, labels, key, *, epochs: int):
+        n = images.shape[0]
+        bs = min(self.batch_size, n)
+        nb = max(n // bs, 1)
+        mom = jax.tree.map(jnp.zeros_like, params)
+
+        def epoch_step(carry, ekey):
+            params, mom = carry
+            perm = jax.random.permutation(ekey, n)[: nb * bs].reshape(nb, bs)
+
+            def batch_step(carry, idx):
+                params, mom = carry
+                g = jax.grad(self._loss)(params, images[idx], labels[idx])
+                mom = jax.tree.map(lambda m, gg: self.momentum * m + gg, mom, g)
+                params = jax.tree.map(lambda p, m: p - self.lr * m, params, mom)
+                return (params, mom), None
+
+            (params, mom), _ = jax.lax.scan(batch_step, (params, mom), perm)
+            return (params, mom), None
+
+        (params, mom), _ = jax.lax.scan(epoch_step, (params, mom),
+                                        jax.random.split(key, epochs))
+        return params
+
+    def _eval_impl(self, params, images, labels):
+        logits, _ = self.model.apply(params, {"images": images}, mode="train")
+        return accuracy(logits, labels)
+
+    def train(self, params, images, labels, key, epochs: int):
+        return self._train(params, images, labels, key, epochs=int(epochs))
+
+    def evaluate(self, params, images, labels) -> float:
+        return float(self._eval(params, images, labels))
+
+
+@dataclasses.dataclass
+class SimWorker:
+    """One simulated worker: data shard + trainer + ground-truth profile."""
+    wid: int
+    images: np.ndarray
+    labels: np.ndarray
+    trainer: LocalTrainer
+    profile: object               # WorkerProfile
+
+    base_version: int = -1        # server version the local model is based on
+
+    def local_train(self, params, key, epochs: int):
+        if self.images.shape[0] == 0:
+            return params
+        return self.trainer.train(params, jnp.asarray(self.images),
+                                  jnp.asarray(self.labels), key, epochs)

@@ -1,0 +1,84 @@
+"""Weight/gradient compression for the cross-island exchange (beyond-paper
+distributed-optimisation trick; the paper only notes transmission cost).
+
+Per-block symmetric int8 quantisation with error feedback: the quantisation
+residual is accumulated locally and added to the next round's delta, so the
+compression is unbiased over time (Seide et al. / EF-SGD style).  The TPU
+hot path is kernels/quant8 (Pallas); this module is the jnp reference used
+everywhere else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to_block(flat, block):
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+def quantize_blockwise(x, *, block: int = 256):
+    """x: any-shape float -> (int8 (nblocks, block), fp32 scales (nblocks,))."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32).reshape(-1), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blockwise(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(tree, *, block: int = 256):
+    """pytree -> pytree of (q8, scale) pairs (leaves become dicts)."""
+    def one(leaf):
+        q, s = quantize_blockwise(leaf, block=block)
+        return {"q": q, "scale": s, "shape": tuple(leaf.shape),
+                "dtype": str(leaf.dtype)}
+    return jax.tree.map(one, tree)
+
+
+def decompress_tree(ctree):
+    def one(d):
+        x = dequantize_blockwise(d["q"], d["scale"], d["shape"])
+        return x.astype(d["dtype"])
+    return jax.tree.map(one, ctree,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_bytes(tree) -> int:
+    """Bytes on the wire for the compressed form (int8 + fp32 scales)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        nblocks = -(-n // 256)
+        total += n + 4 * nblocks
+    return total
+
+
+class ErrorFeedback:
+    """Stateful residual accumulator: delta_sent = Q(delta + residual)."""
+
+    def __init__(self, like_tree):
+        self.residual = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), like_tree)
+
+    def compress(self, delta, *, block: int = 256):
+        carried = jax.tree.map(
+            lambda d, r: d.astype(jnp.float32) + r, delta, self.residual)
+        ctree = compress_tree(carried, block=block)
+        deq = decompress_tree(jax.tree.map(
+            lambda d: dict(d, dtype="float32"), ctree,
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+        self.residual = jax.tree.map(lambda c, q: c - q, carried, deq)
+        return ctree

@@ -1,0 +1,117 @@
+"""Aggregation server (paper SSIII-C): model versioning, worker selection,
+sync barrier / async merges, and the accuracy-driven policy updates."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import aggregation, selection
+from repro.core.cost_model import WorkerStats
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    policy: str = "time_based"      # all|random|sequential|rmin_rmax|time_based
+    mode: str = "sync"              # sync | async
+    aggregation: str = "fedavg"     # see aggregation.aggregation_weights
+    epochs_per_round: int = 2       # r (alg 2) / rmin seed (alg 1)
+    random_k: int = 5
+    rmin_init: float = 2.0
+    rmax_init: float = 4.0
+    accuracy_threshold_A: float = 0.015
+    async_base_alpha: float = 0.6
+    staleness_scheme: str = "polynomial"
+    server_opt: str = "avg"         # avg (paper) | avgm | adam | yogi (FedOpt)
+    server_lr: float = 1.0
+
+
+class AggregationServer:
+    """Holds the server model + policy state; pure-python control plane."""
+
+    def __init__(self, params, stats: dict[int, WorkerStats],
+                 cfg: ServerConfig, *, seed: int = 0):
+        self.params = params
+        self.stats = stats
+        self.cfg = cfg
+        self.version = 0
+        self.acc_history: list[float] = [0.0]
+        self.rng = np.random.default_rng(seed)
+        self._rmm = selection.RMinRMaxState(cfg.rmin_init, cfg.rmax_init)
+        self._tb = selection.TimeBasedState(
+            T=0.0, r=cfg.epochs_per_round, A=cfg.accuracy_threshold_A)
+        from repro.core.server_opt import ServerOptimizer
+        self._sopt = ServerOptimizer(cfg.server_opt, lr=cfg.server_lr)
+        self._sopt_state = self._sopt.init(params)
+
+    # ---- selection ----
+    def select(self) -> list[int]:
+        c = self.cfg
+        if c.policy == "all":
+            return selection.select_all(self.stats)
+        if c.policy == "sequential":
+            # the paper's sequential baseline: the single worker holding data
+            with_data = [w for w, s in self.stats.items() if s.n_data > 0]
+            return with_data[:1]
+        if c.policy == "random":
+            return selection.select_random(self.stats, c.random_k, self.rng)
+        if c.policy == "rmin_rmax":
+            return selection.rmin_rmax_select(self.stats, self._rmm)
+        if c.policy == "time_based":
+            return selection.time_based_select(self.stats, self._tb)
+        if c.policy == "fastest":
+            return selection.select_fastest(self.stats, c.random_k,
+                                            c.epochs_per_round)
+        raise ValueError(f"unknown policy {c.policy}")
+
+    def epochs_for(self, wid: int, round_budget: Optional[float] = None) -> int:
+        if self.cfg.policy == "rmin_rmax" and round_budget is not None:
+            return selection.epochs_for_worker(self.stats[wid], self._rmm,
+                                               round_budget)
+        return self.cfg.epochs_per_round
+
+    # ---- aggregation ----
+    def sync_aggregate(self, responses: dict[int, object], sim_time: float):
+        """responses: wid -> worker params (all based on self.version)."""
+        if not responses:
+            return
+        wids = sorted(responses)
+        w = aggregation.aggregation_weights(
+            self.cfg.aggregation,
+            [max(self.stats[i].n_data, 1) for i in wids],
+            staleness=[0.0] * len(wids))
+        self.params, self._sopt_state = self._sopt.apply(
+            self.params, [responses[i] for i in wids], w, self._sopt_state)
+        for i in wids:
+            self.stats[i].last_contribution = sim_time
+        self.version += 1
+
+    def async_fold(self, wid: int, worker_params, base_version: int,
+                   sim_time: float):
+        staleness = self.version - base_version
+        alpha = aggregation.staleness_alpha(
+            self.cfg.async_base_alpha, staleness,
+            scheme=self.cfg.staleness_scheme)
+        self.params = aggregation.async_merge(self.params, worker_params,
+                                              alpha)
+        self.stats[wid].last_contribution = sim_time
+        self.version += 1
+
+    # ---- policy feedback (Eq. 1-3) ----
+    def record_accuracy(self, acc: float):
+        prev = self.acc_history[-1]
+        self.acc_history.append(acc)
+        if self.cfg.policy == "rmin_rmax":
+            self._rmm = selection.rmin_rmax_update(self._rmm, acc)
+        elif self.cfg.policy == "time_based":
+            st = dataclasses.replace(self._tb, acc_prev=prev)
+            self._tb = selection.time_based_update(self.stats, st, acc)
+
+    @property
+    def policy_state(self):
+        if self.cfg.policy == "rmin_rmax":
+            return self._rmm
+        if self.cfg.policy == "time_based":
+            return self._tb
+        return None

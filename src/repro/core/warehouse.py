@@ -1,0 +1,103 @@
+"""Data warehouse (paper SSIII-B.1): pointer-addressed storage for model
+weights with one-time fetch credentials.
+
+The paper separates the CONTROL channel (small messages) from the BULK
+channel (FTP side-channel for weights, fetched with one-time credentials).
+Here: storage backends are RAM or disk (.npz); the credential dance is kept
+because it is the paper's access-control mechanism and doubles as our
+checkpoint-integrity layer (a credential is valid once, so a crashed fetch
+can never double-apply a stale model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import secrets
+import tempfile
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Pointer:
+    """Uniquely identifies a model on a (possibly remote) warehouse."""
+    address: str          # warehouse network address ("local" in-process)
+    uid: str              # unique ID within that warehouse
+
+
+class CredentialError(KeyError):
+    pass
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class DataWarehouse:
+    """getter/setter store for pytrees keyed by unique IDs (SSIII-B.1)."""
+
+    def __init__(self, root: Optional[str] = None, address: str = "local"):
+        self.address = address
+        self.root = Path(root) if root else None
+        if self.root:
+            self.root.mkdir(parents=True, exist_ok=True)
+        self._mem: dict[str, object] = {}
+        self._disk: dict[str, tuple[Path, object]] = {}  # uid -> (path, treedef)
+        self._credentials: dict[str, str] = {}           # token -> uid
+
+    # ---- setters ----
+    def put(self, tree, *, storage: str = "memory", uid: Optional[str] = None
+            ) -> Pointer:
+        uid = uid or secrets.token_hex(8)
+        if storage == "memory" or self.root is None:
+            self._mem[uid] = jax.tree.map(lambda x: x, tree)
+        elif storage == "disk":
+            leaves, treedef = _flatten(tree)
+            path = self.root / f"{uid}.npz"
+            tmp = path.with_suffix(".tmp.npz")
+            np.savez(tmp, **{f"a{i}": np.asarray(l) for i, l in
+                             enumerate(leaves)})
+            os.replace(tmp, path)  # atomic publish
+            self._disk[uid] = (path, treedef)
+        else:
+            raise ValueError(f"unknown storage '{storage}'")
+        return Pointer(self.address, uid)
+
+    # ---- getters ----
+    def get(self, uid: str):
+        if uid in self._mem:
+            return self._mem[uid]
+        if uid in self._disk:
+            path, treedef = self._disk[uid]
+            with np.load(path) as z:
+                leaves = [z[f"a{i}"] for i in range(len(z.files))]
+            return jax.tree.unflatten(treedef, leaves)
+        raise KeyError(uid)
+
+    def exists(self, uid: str) -> bool:
+        return uid in self._mem or uid in self._disk
+
+    def delete(self, uid: str):
+        self._mem.pop(uid, None)
+        entry = self._disk.pop(uid, None)
+        if entry:
+            entry[0].unlink(missing_ok=True)
+
+    # ---- one-time credential dance (the FTP side-channel analogue) ----
+    def issue_credential(self, uid: str) -> str:
+        if not self.exists(uid):
+            raise KeyError(uid)
+        token = secrets.token_hex(16)
+        self._credentials[token] = uid
+        return token
+
+    def fetch(self, token: str):
+        uid = self._credentials.pop(token, None)
+        if uid is None:
+            raise CredentialError("invalid or already-used credential")
+        return self.get(uid)

@@ -1,0 +1,3 @@
+from repro.data.partition import (paper_table3, paper_table4,
+                                  partition_by_batches, dirichlet_partition)
+from repro.data.synthetic import make_classification_set, make_token_stream

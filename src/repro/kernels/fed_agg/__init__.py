@@ -1,0 +1,1 @@
+from repro.kernels.fed_agg.ops import fed_agg, fed_agg_tree

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: K-way weighted aggregation (the FLight merge).
+
+Computes out[n] = sum_k w[k] * x[k, n] over a stacked (K, N) weight matrix
+in fp32, streaming N through VMEM in (K, BLOCK) tiles.  One pass over HBM:
+arithmetic intensity ~K flops/2K bytes, i.e. HBM-bound -- the kernel's job
+is to keep the single pass (XLA's unfused weighted sum reads the stack once
+per island when K is traced per-element).
+
+Tiling: N is reshaped to (N // BLOCK_N, BLOCK_N) with BLOCK_N a multiple of
+128 (lane width); K rides whole in the sublane dim (islands are few).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 2048
+
+
+def _fed_agg_kernel(w_ref, x_ref, o_ref):
+    # w_ref: (K, 1) fp32; x_ref: (K, BLOCK_N); o_ref: (1, BLOCK_N)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # (K, 1)
+    acc = jnp.sum(x * w, axis=0, keepdims=True)  # (1, BLOCK_N)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def fed_agg_2d(stacked, weights, *, interpret: bool = False,
+               block_n: int = BLOCK_N):
+    """stacked: (K, N) any float dtype; weights: (K,) fp32 -> (N,)."""
+    K, N = stacked.shape
+    pad = (-N) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Np = N + pad
+    out = pl.pallas_call(
+        _fed_agg_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), stacked.dtype),
+        interpret=interpret,
+    )(weights.reshape(K, 1).astype(jnp.float32), stacked)
+    return out[0, :N]

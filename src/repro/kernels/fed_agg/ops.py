@@ -1,0 +1,34 @@
+"""Public API for the fed_agg kernel: TPU pallas path / CPU interpret /
+jnp reference, switchable; pytree convenience wrapper."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fed_agg.kernel import fed_agg_2d
+from repro.kernels.fed_agg.ref import fed_agg_2d_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fed_agg(stacked, weights, *, impl: str = "auto"):
+    """stacked (K, ...) -> weighted sum over axis 0 (fp32 accumulate)."""
+    K = stacked.shape[0]
+    flat = stacked.reshape(K, -1)
+    if impl == "ref":
+        out = fed_agg_2d_ref(flat, weights)
+    else:
+        out = fed_agg_2d(flat, weights, interpret=_use_interpret())
+    return out.reshape(stacked.shape[1:])
+
+
+def fed_agg_tree(param_list, weights, *, impl: str = "auto"):
+    """Aggregate a list of parameter pytrees into one (kernel-backed)."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    def merge(*leaves):
+        return fed_agg(jnp.stack(leaves), w, impl=impl)
+
+    return jax.tree.map(merge, *param_list)

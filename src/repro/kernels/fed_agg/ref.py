@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fed_agg kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fed_agg_2d_ref(stacked, weights):
+    """out[n] = sum_k w[k] * x[k, n], fp32 accumulate."""
+    acc = jnp.einsum("kn,k->n", stacked.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return acc.astype(stacked.dtype)
+
+
+def fed_agg_tree_ref(param_list, weights):
+    w = jnp.asarray(weights, jnp.float32)
+
+    def merge(*leaves):
+        stack = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        return jnp.einsum("k...,k->...", stack, w).astype(leaves[0].dtype)
+
+    return jax.tree.map(merge, *param_list)

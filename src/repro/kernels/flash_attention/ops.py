@@ -1,0 +1,27 @@
+"""Public flash-attention API ((B,T,H,D) layout used by the models)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhtd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto", bq: int = 512, bk: int = 512):
+    """q: (B, T, H, D); k/v: (B, S, Hkv, D) -> (B, T, H, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "ref":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_bhtd(qt, kt, vt, causal=causal, window=window,
+                                   bq=bq, bk=bk,
+                                   interpret=_use_interpret())
+    return out.transpose(0, 2, 1, 3)

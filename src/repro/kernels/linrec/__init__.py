@@ -1,0 +1,1 @@
+from repro.kernels.linrec.ops import linrec

@@ -1,0 +1,26 @@
+"""Public linrec API: any (..., T, D)-broadcastable diagonal recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.linrec.kernel import linrec_btd
+from repro.kernels.linrec.ref import linrec_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def linrec(a, b, *, impl: str = "auto", bt: int = 256, bd: int = 512):
+    """h_t = a_t * h_{t-1} + b_t over axis -2; a, b: (B, T, D)."""
+    orig_shape = a.shape
+    B = 1
+    for s in orig_shape[:-2]:
+        B *= s
+    a3 = a.reshape(B, orig_shape[-2], orig_shape[-1])
+    b3 = b.reshape(B, orig_shape[-2], orig_shape[-1])
+    if impl == "ref":
+        hs = linrec_ref(a3, b3)
+    else:
+        hs = linrec_btd(a3, b3, bt=bt, bd=bd, interpret=_use_interpret())
+    return hs.reshape(orig_shape)

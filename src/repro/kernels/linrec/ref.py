@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the linrec kernel (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linrec_ref(a, b):
+    """a, b: (B, T, D) fp32 -> hs (B, T, D); h_t = a_t h_{t-1} + b_t."""
+    af = a.astype(jnp.float32).swapaxes(0, 1)  # (T, B, D)
+    bf = b.astype(jnp.float32).swapaxes(0, 1)
+
+    def step(h, ab):
+        at, bt_ = ab
+        h = at * h + bt_
+        return h, h
+
+    h0 = jnp.zeros(af.shape[1:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (af, bf))
+    return hs.swapaxes(0, 1)

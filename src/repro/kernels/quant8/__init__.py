@@ -1,0 +1,1 @@
+from repro.kernels.quant8.ops import quantize, dequantize

@@ -1,0 +1,77 @@
+"""Pallas TPU kernels: per-block symmetric int8 quantise / dequantise.
+
+Used by the compressed cross-island weight exchange: each BLOCK elements
+share one fp32 scale (absmax/127).  Pure HBM-streaming kernels; the win on
+TPU is fusing absmax + scale + round + cast into one VMEM pass (XLA emits
+two passes: reduce then binary op).
+
+Layout: x reshaped to (nblocks, BLOCK); BLOCK a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+ROWS = 8  # quant rows processed per grid step (sublane-friendly)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (ROWS, BLOCK)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / safe), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)              # (ROWS, 1)
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_blocked(xb, *, interpret: bool = False):
+    """xb: (nblocks, BLOCK) fp32 -> (int8 same shape, scales (nblocks, 1))."""
+    nb, blk = xb.shape
+    pad = (-nb) % ROWS
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nbp // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, blk), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, blk), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nbp, blk), jnp.int8),
+                   jax.ShapeDtypeStruct((nbp, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q[:nb], s[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def dequantize_blocked(q, s, *, out_dtype=jnp.float32,
+                       interpret: bool = False):
+    nb, blk = q.shape
+    pad = (-nb) % ROWS
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        s = jnp.pad(s, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nbp // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, blk), out_dtype),
+        interpret=interpret,
+    )(q, s)
+    return out[:nb]

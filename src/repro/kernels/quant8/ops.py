@@ -1,0 +1,40 @@
+"""Public quant8 API mirroring core.compression's blockwise layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8.kernel import (BLOCK, dequantize_blocked,
+                                         quantize_blocked)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize(x, *, block: int = BLOCK, impl: str = "auto"):
+    """x any shape -> (q int8 (nblocks, block), scales (nblocks,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    xb = flat.reshape(-1, block)
+    if impl == "ref":
+        from repro.core.compression import quantize_blockwise
+        return quantize_blockwise(x, block=block)
+    q, s = quantize_blocked(xb, interpret=_use_interpret())
+    return q, s[:, 0]
+
+
+def dequantize(q, scales, shape, *, out_dtype=jnp.float32,
+               impl: str = "auto"):
+    if impl == "ref":
+        from repro.core.compression import dequantize_blockwise
+        return dequantize_blockwise(q, scales, shape)
+    flat = dequantize_blocked(q, scales.reshape(-1, 1),
+                              out_dtype=out_dtype,
+                              interpret=_use_interpret()).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)

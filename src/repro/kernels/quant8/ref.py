@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for quant8 (shared with core.compression)."""
+from repro.core.compression import (quantize_blockwise as quantize_ref,
+                                    dequantize_blockwise as dequantize_ref)

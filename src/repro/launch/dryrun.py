@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell this AOT-compiles (no device allocation beyond host placeholders):
+  train_4k              -> the FL island train step (vmapped over pods on the
+                           multi-pod mesh) AND the fl_aggregate exchange
+  prefill_32k           -> serve prefill step
+  decode_32k / long_500k-> serve decode step (KV/state cache as inputs)
+and records memory_analysis / cost_analysis / per-collective traffic into
+artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / \
+    os.environ.get("REPRO_DRYRUN_DIR", "dryrun")
+
+
+def _cell_path(arch: str, shape: str, mesh: str) -> Path:
+    return ARTIFACTS / f"{arch}__{shape}__{mesh}.json"
+
+
+# ---------------------------------------------------------------------------
+# In-process lowering of one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import federated
+    from repro.dist import hlo_analysis as H
+    from repro.dist import hlo_cost
+    from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES,
+                                     SERVE_RULES, spec_tree_for, use_rules)
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_production_mesh, n_islands
+    from repro.models import build_model
+    from repro.models.config import SHAPES
+    from repro.models.param import ParamDef, abstract_params, is_def, pdef
+    from repro.optim import adamw, opt_state_defs
+
+    overrides = dict(overrides or {})
+    use_serve_rules = overrides.pop("_serve_rules", True)
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    model = build_model(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    P = n_islands(mesh)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "status": "ok",
+        "n_params": model.n_params, "n_active_params": model.n_active_params,
+        "overrides": overrides or {},
+        "entries": {},
+    }
+
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        result["status"] = "skipped"
+        result["reason"] = ("full quadratic attention at 524288 tokens; "
+                            "long-context runs only for ssm/hybrid/windowed "
+                            "archs (DESIGN.md SS6)")
+        return result
+
+    def specs(defs, rules):
+        return spec_tree_for(defs, mesh, rules)
+
+    def lower_entry(name, fn, in_shardings, args, donate=(), rules=DEFAULT_RULES):
+        t0 = time.time()
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        with use_rules(rules), mesh:  # ambient mesh so constrain() resolves
+            lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        flops_xla, byts_xla = H.cost_analysis_terms(compiled)
+        txt = compiled.as_text()
+        # PRIMARY: trip-count-aware HLO cost model (XLA's cost_analysis
+        # counts scan bodies once; see dist/hlo_cost.py + EXPERIMENTS.md).
+        hc = hlo_cost.analyze(txt)
+        roof = H.Roofline(hc["flops"], hc["hbm_bytes"],
+                          hc["collective_bytes"])
+        entry = {
+            "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "hlo_cost": {k: hc[k] for k in
+                         ("flops", "hbm_bytes", "collective_bytes",
+                          "collective_by_op", "transcendentals")},
+            "hlo_cost_diagnostics": hc["diagnostics"][:20],
+            "xla_cost_analysis_once": {"flops": flops_xla,
+                                       "bytes_accessed": byts_xla},
+            "collectives_once": H.collective_bytes(txt),
+            "memory_analysis": H.memory_analysis_dict(compiled),
+            "roofline": roof.as_dict(),
+            "hlo_lines": txt.count("\n"),
+        }
+        result["entries"][name] = entry
+        return entry
+
+    if shape.kind == "train":
+        p_defs = model.param_defs()
+        o_defs = opt_state_defs(p_defs)
+        in_defs = model.input_defs(shape)
+        opt = adamw(1e-4)
+        if P > 1:
+            from repro.models.param import stack_defs as _stack
+
+            def island_stack(defs):
+                return jax.tree.map(
+                    lambda d: ParamDef((P,) + d.shape, d.dtype,
+                                       ("island",) + d.logical_axes,
+                                       d.init, d.fan_in_axes),
+                    defs, is_leaf=is_def)
+
+            p_defs = island_stack(p_defs)
+            o_defs = island_stack(o_defs)
+            in_defs = jax.tree.map(
+                lambda d: ParamDef((P, d.shape[0] // P) + d.shape[1:],
+                                   d.dtype, ("island",) + d.logical_axes,
+                                   d.init, d.fan_in_axes),
+                in_defs, is_leaf=is_def)
+        step = S.make_fl_train_step(model, opt, P)
+        args = (abstract_params(p_defs), abstract_params(o_defs),
+                abstract_params(in_defs))
+        shardings = (specs(p_defs, ISLAND_RULES), specs(o_defs, ISLAND_RULES),
+                     specs(in_defs, ISLAND_RULES))
+        lower_entry("train_step", step, shardings, args, donate=(0, 1),
+                    rules=ISLAND_RULES)
+
+        if P > 1:
+            agg = S.make_fl_aggregate()
+            mix_def = pdef((P, P), (None, None), dtype=jnp.float32)
+            agg_args = (abstract_params(p_defs),
+                        jax.ShapeDtypeStruct((P, P), jnp.float32))
+            agg_shard = (specs(p_defs, DEFAULT_RULES),
+                         specs({"m": mix_def}, DEFAULT_RULES)["m"])
+            lower_entry("fl_aggregate", agg, agg_shard, agg_args, donate=(0,))
+            # beyond-paper: int8-delta compressed exchange (wire = q8+scales)
+            aggc = S.make_fl_aggregate(compress=True)
+            aggc_args = (abstract_params(p_defs), abstract_params(p_defs),
+                         jax.ShapeDtypeStruct((P, P), jnp.float32))
+            aggc_shard = (agg_shard[0], agg_shard[0], agg_shard[1])
+            lower_entry("fl_aggregate_q8", aggc, aggc_shard, aggc_args,
+                        donate=(0,))
+        else:
+            result["entries"]["fl_aggregate"] = {
+                "note": "single island on the single-pod mesh: the exchange "
+                        "is an identity; lowered on the multi-pod mesh"}
+
+    else:  # prefill / decode: stationary (TP-only) weights, see SERVE_RULES
+        # stationary weights must FIT when replicated over data: bf16 params
+        # / TP degree <= 8 GB/device, else keep the FSDP layout (huge MoE)
+        fits = model.n_params * 2 / mesh.shape["model"] < 8e9
+        serve_rules = SERVE_RULES if (use_serve_rules and fits) \
+            else DEFAULT_RULES
+        p_defs = model.param_defs()
+        in_defs = model.input_defs(shape)
+        if shape.kind == "prefill":
+            step = S.make_prefill_step(model)
+            args = (abstract_params(p_defs), abstract_params(in_defs))
+            shardings = (specs(p_defs, serve_rules),
+                         specs(in_defs, serve_rules))
+            lower_entry("prefill_step", step, shardings, args,
+                        rules=serve_rules)
+        else:
+            c_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+            step = S.make_decode_step(model)
+            args = (abstract_params(p_defs), abstract_params(in_defs),
+                    abstract_params(c_defs))
+            shardings = (specs(p_defs, serve_rules),
+                         specs(in_defs, serve_rules),
+                         specs(c_defs, serve_rules))
+            lower_entry("decode_step", step, shardings, args, donate=(2,),
+                        rules=serve_rules)
+
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Driver: one subprocess per cell (isolates the 512-device env + memory)
+# ---------------------------------------------------------------------------
+
+def all_cells(meshes=("single", "multi")) -> list[tuple[str, str, str]]:
+    from repro.configs import list_archs
+    from repro.models.config import SHAPES
+    cells = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            for mesh in meshes:
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig overrides (perf sweeps)")
+    ap.add_argument("--tag", default=None,
+                    help="artifact filename suffix for override sweeps")
+    args = ap.parse_args()
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+        cells = all_cells(meshes)
+        todo = [c for c in cells if args.force or not _cell_path(*c).exists()]
+        print(f"[dryrun] {len(todo)}/{len(cells)} cells to run", flush=True)
+        failures = []
+        for i, (arch, shape, mesh) in enumerate(todo):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+                   arch, "--shape", shape, "--mesh", mesh]
+            print(f"[dryrun {i+1}/{len(todo)}] {arch} {shape} {mesh}",
+                  flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh))
+                print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+        print(f"[dryrun] done; {len(failures)} failures: {failures}",
+              flush=True)
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    overrides = json.loads(args.overrides) if args.overrides else None
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, overrides)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "traceback": traceback.format_exc()}
+    name = f"{args.arch}__{args.shape}__{args.mesh}"
+    if args.tag:
+        name += f"__{args.tag}"
+    out = ARTIFACTS / f"{name}.json"
+    out.write_text(json.dumps(res, indent=2, default=str))
+    print(json.dumps({k: v for k, v in res.items() if k != "entries"},
+                     indent=2, default=str))
+    for ename, e in res.get("entries", {}).items():
+        if "roofline" in e:
+            r = e["roofline"]
+            print(f"  {ename}: dominant={r['dominant']} "
+                  f"t_comp={r['t_compute_s']:.2e}s "
+                  f"t_mem={r['t_memory_s']:.2e}s "
+                  f"t_coll={r['t_collective_s']:.2e}s "
+                  f"(lower {e['lower_s']}s compile {e['compile_s']}s)")
+    if res["status"] == "error":
+        print(res["traceback"][-3000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

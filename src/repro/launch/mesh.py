@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax init).
+
+  single-pod : (data=16, model=16)            = 256 chips (one v5e pod slice)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips; `pod` is the FL
+               island axis (1 island per pod, paper semantics).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """Whatever this process actually has (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+
+
+def n_islands(mesh) -> int:
+    return mesh.shape.get("pod", 1)

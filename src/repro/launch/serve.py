@@ -1,0 +1,71 @@
+"""Batched serving launcher: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
+      --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    rng = np.random.default_rng(args.seed)
+    B, T = args.batch, args.prompt_len
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)), jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, T, cfg.d_model)), jnp.bfloat16)
+
+    t0 = time.time()
+    nxt, cache = prefill(params, batch)
+    jax.block_until_ready(nxt)
+    t_prefill = time.time() - t0
+    print(f"[serve] prefill {B}x{T}: {t_prefill*1e3:.1f}ms "
+          f"({B*T/t_prefill:.0f} tok/s)")
+
+    out = [np.asarray(nxt)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        nxt, cache = decode(params, {
+            "tokens": nxt[:, None].astype(jnp.int32),
+            "positions": jnp.full((B, 1), T + i, jnp.int32)}, cache)
+        out.append(np.asarray(nxt))
+    jax.block_until_ready(nxt)
+    t_dec = time.time() - t0
+    toks = np.stack(out, axis=1)
+    print(f"[serve] decode {args.gen} steps: {t_dec*1e3:.1f}ms "
+          f"({B*(args.gen-1)/max(t_dec,1e-9):.0f} tok/s)")
+    print(f"[serve] sample generations (first 12 ids): {toks[:, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Continuous-batching serve loop (vLLM-flavoured, beyond-paper).
+
+A fixed pool of B slots shares one batched KV/state cache; requests join
+mid-flight (prefill into a free slot), a single batched decode step runs
+for ALL live slots each tick with PER-SLOT positions (ragged batch -- see
+the vmapped cache writes in models/layers.py), and finished slots are
+recycled.  Prefill compiles once per distinct prompt length (callers can
+bucket prompts if they need a tighter jit cache).
+
+CPU-runnable at smoke scale; the same loop drives TPU serving with the
+SERVE_RULES sharding (stationary weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.B = max_batch
+        self.S = max_len
+        from repro.models.param import is_def
+        self.cache = jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype),
+            model.cache_defs(max_batch, max_len), is_leaf=is_def)
+        self.live: dict[int, Request] = {}   # slot -> request
+        self.free = list(range(max_batch))
+        self.queue: list[Request] = []
+        self.lengths = np.zeros(max_batch, np.int64)  # host-side truth
+        self._next = jnp.zeros((max_batch,), jnp.int32)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- jitted kernels -------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        logits, cache = self.model.apply(params, {"tokens": tokens},
+                                         mode="prefill")
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt, cache
+
+    def _decode_impl(self, params, cache, tokens, positions):
+        logits, cache = self.model.apply(
+            params, {"tokens": tokens, "positions": positions},
+            mode="decode", cache=cache)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt, cache
+
+    # -- slot management -------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.free:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            T = len(req.prompt)
+            assert T < self.S, "prompt exceeds slot capacity"
+            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+            nxt, pcache = self._prefill(self.params, toks)
+            self._write_slot(slot, pcache, T)
+            self._next = self._next.at[slot].set(int(nxt[0]))
+            self.lengths[slot] = T
+            req.out.append(int(nxt[0]))
+            self.live[slot] = req
+
+    def _write_slot(self, slot: int, pcache, true_len: int):
+        """Scatter a single-sequence prefill cache (leaves (L, 1, ...)) into
+        the batched cache (leaves (L, B, ...)) at `slot`; time-like axes are
+        padded/cropped to the slot capacity."""
+        def one(bc, pc):
+            if bc.dtype == jnp.int32 and bc.ndim == 2:   # (L, B) lengths
+                return bc.at[:, slot].set(jnp.minimum(pc[:, 0], true_len))
+            src = pc[:, 0]                               # (L, ...)
+            want = bc.shape[2:]
+            if src.shape[1:] != want:                    # time axis differs
+                width = min(src.shape[1], want[0])
+                src = src[:, :width]
+                pad = [(0, 0), (0, want[0] - width)] + \
+                    [(0, 0)] * (src.ndim - 2)
+                src = jnp.pad(src, pad)
+            return bc.at[:, slot].set(src.astype(bc.dtype))
+
+        self.cache = jax.tree.map(one, self.cache, pcache)
+
+    # -- main tick --------------------------------------------------------
+    def tick(self) -> list[Request]:
+        """Admit waiting requests, run ONE batched decode step, return the
+        requests that finished this tick."""
+        self._admit()
+        if not self.live:
+            return []
+        positions = jnp.asarray(self.lengths.reshape(self.B, 1), jnp.int32)
+        nxt, self.cache = self._decode(
+            self.params, self.cache, self._next[:, None], positions)
+        self._next = nxt.astype(jnp.int32)
+        finished = []
+        for slot, req in list(self.live.items()):
+            self.lengths[slot] += 1
+            req.out.append(int(nxt[slot]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                del self.live[slot]
+                self.free.append(slot)
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        done = []
+        for _ in range(max_ticks):
+            done += self.tick()
+            if not self.live and not self.queue:
+                break
+        return done

@@ -1,0 +1,1 @@
+from repro.models.model_factory import build_model, Model

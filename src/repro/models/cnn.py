@@ -1,0 +1,63 @@
+"""Small CNN / MLP classifiers -- the paper's own Tier-A workload
+(MNIST / CIFAR-10 style federated training on heterogeneous workers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.param import pdef
+
+
+def cnn_defs(cfg):
+    chans = cfg.cnn_channels or (16, 32)
+    c_in = cfg.img_c
+    defs = {}
+    for i, c_out in enumerate(chans):
+        defs[f"conv{i}_w"] = pdef((3, 3, c_in, c_out), (None, None, None, None),
+                                  dtype=jnp.float32, fan_in_axes=(0, 1, 2))
+        defs[f"conv{i}_b"] = pdef((c_out,), (None,), dtype=jnp.float32,
+                                  init="zeros")
+        c_in = c_out
+    hw = cfg.img_hw // (2 ** len(chans))
+    flat = hw * hw * c_in
+    defs["fc_w"] = pdef((flat, cfg.n_classes), (None, None), dtype=jnp.float32,
+                        fan_in_axes=(0,))
+    defs["fc_b"] = pdef((cfg.n_classes,), (None,), dtype=jnp.float32,
+                        init="zeros")
+    return defs
+
+
+def cnn_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
+    """batch_inputs: {"images": (B,H,W,C) float32}. Returns (logits, 0.0)."""
+    x = batch_inputs["images"].astype(jnp.float32)
+    chans = cfg.cnn_channels or (16, 32)
+    for i in range(len(chans)):
+        x = lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}_b"])
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    logits = x @ params["fc_w"] + params["fc_b"]
+    return logits, 0.0
+
+
+def mlp_classifier_defs(cfg):
+    d_in = cfg.img_hw * cfg.img_hw * cfg.img_c
+    h = cfg.d_model or 128
+    return {
+        "w1": pdef((d_in, h), (None, None), dtype=jnp.float32, fan_in_axes=(0,)),
+        "b1": pdef((h,), (None,), dtype=jnp.float32, init="zeros"),
+        "w2": pdef((h, cfg.n_classes), (None, None), dtype=jnp.float32,
+                   fan_in_axes=(0,)),
+        "b2": pdef((cfg.n_classes,), (None,), dtype=jnp.float32, init="zeros"),
+    }
+
+
+def mlp_classifier_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
+    x = batch_inputs["images"].astype(jnp.float32)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return x @ params["w2"] + params["b2"], 0.0

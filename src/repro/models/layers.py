@@ -1,0 +1,605 @@
+"""Core neural layers (pure JAX, shardable, scan-friendly).
+
+Conventions:
+  * activations bf16, softmax/normalisation statistics fp32;
+  * attention tensors are (batch, seq, heads, head_dim);
+  * every layer is a pure function  f(params_subtree, x, ...) -> y;
+  * sequence lengths are static; decode uses a cache + scalar position.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain, mesh_axis_size
+from repro.models.param import pdef
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_defs(cfg, kind=None):
+    kind = kind or cfg.norm
+    d = {"scale": pdef((cfg.d_model,), (None,), init="ones")}
+    if kind == "layernorm":
+        d["bias"] = pdef((cfg.d_model,), (None,), init="zeros")
+    return d
+
+
+def apply_norm(p, x, kind="rmsnorm"):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+
+def act_fn(name):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_plain": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# --------------------------------------------------------------------------
+# RoPE (full + partial/"2d" fraction, as in ChatGLM)
+# --------------------------------------------------------------------------
+
+def rope_apply(x, positions, theta=10_000.0, fraction=1.0):
+    """x: (..., T, H, D); positions: (..., T) int32. Rotates first
+    `fraction*D` dims, passes the rest through (ChatGLM partial rotary)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions (..., T) -> (..., T, 1, half): broadcast over heads
+    ang = positions.astype(jnp.float32)[..., None, None] * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate(
+        [y1.astype(x.dtype), y2.astype(x.dtype), x_pass], axis=-1
+    )
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+# decode headroom appended to non-windowed prefill caches (slots for
+# subsequently generated tokens)
+PREFILL_DECODE_MARGIN = 128
+
+
+def attention_full(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Exact attention with a materialised score matrix. Use for seq <= ~8k.
+
+    q: (B,T,H,D)  k,v: (B,S,Hkv,D).  GQA via head grouping.
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(T) + q_offset
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(B, T, H, D)
+
+
+def flash_attention_xla(q, k, v, *, causal=True, window=0, q_offset=0,
+                        q_block=1024, kv_block=1024):
+    """Memory-bounded blockwise attention (pure-XLA 'flash') with online
+    softmax.  Never materialises (T,S) scores: peak extra memory is
+    O(q_block * kv_block) per (batch, head).
+
+    For sliding-window attention only ceil((window+q_block)/kv_block)+1 kv
+    blocks are visited per q block (FLOPs proportional to the window).  For
+    full causal attention the baseline visits the full rectangle with
+    masking; the triangular schedule is a recorded perf iteration.
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    q_block = min(q_block, T)
+    kv_block = min(kv_block, S)
+    assert T % q_block == 0 and S % kv_block == 0
+    nq, nkv = T // q_block, S // kv_block
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, nq, q_block, Hkv, G, D)
+
+    if window:
+        n_win = (window + q_block + kv_block - 2) // kv_block + 1
+        n_win = min(n_win, nkv)
+    else:
+        n_win = nkv
+
+    kpos_all = jnp.arange(S)
+
+    def q_step(_, qi):
+        qblk, iq = qi  # (B,Cq,Hkv,G,D), scalar block index
+        qpos = iq * q_block + jnp.arange(q_block) + q_offset
+
+        if window:
+            lo = iq * q_block + q_offset - (window - 1)
+            first = jnp.clip(lo // kv_block, 0, nkv - n_win)
+        else:
+            first = jnp.int32(0)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            jb = first + j
+            kblk = lax.dynamic_slice_in_dim(k, jb * kv_block, kv_block, 1)
+            vblk = lax.dynamic_slice_in_dim(v, jb * kv_block, kv_block, 1)
+            kpos = jb * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bthgd,bshd->bhgts", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgts,bshd->bhgtd", p.astype(q.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_win))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,Hkv,G,Cq,D) -> (B,Cq,Hkv,G,D)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    qblocks = qg.transpose(1, 0, 2, 3, 4, 5)  # (nq,B,Cq,Hkv,G,D)
+    _, outs = lax.scan(q_step, None, (qblocks, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, H, D)
+    return out
+
+
+def flash_attention_xla_triangular(q, k, v, *, q_offset=0, block=1024):
+    """Causal blockwise attention with a BALANCED TRIANGULAR schedule.
+
+    The plain blockwise path visits the full (nq x nkv) rectangle and masks
+    the upper triangle -- half the attention FLOPs are dead.  Pairing query
+    row p with row nq-1-p gives every pair the same fixed budget of nq+1 kv
+    steps (p+1 for the early row + nq-p for the late row), so a scan over
+    nq/2 pairs x (nq+1) steps covers exactly the causal triangle:
+    ~2x fewer attention FLOPs at 32k prefill (EXPERIMENTS.md SSPerf).
+    Requires T == S, T % block == 0, nq even; callers fall back otherwise.
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    assert T == S and T % block == 0 and (T // block) % 2 == 0
+    nq = T // block
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, nq, block, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    def pair_step(_, p):
+        qa = jax.lax.dynamic_index_in_dim(qg, p, 0, keepdims=False)
+        qb = jax.lax.dynamic_index_in_dim(qg, nq - 1 - p, 0, keepdims=False)
+        pos_a = p * block + jnp.arange(block) + q_offset
+        pos_b = (nq - 1 - p) * block + jnp.arange(block) + q_offset
+
+        def kv_step(carry, jj):
+            ma, la, acca, mb, lb, accb = carry
+            take_a = jj <= p
+            kv_idx = jnp.where(take_a, jj, jj - p - 1)
+            kblk = lax.dynamic_slice_in_dim(k, kv_idx * block, block, 1)
+            vblk = lax.dynamic_slice_in_dim(v, kv_idx * block, block, 1)
+            kpos = kv_idx * block + jnp.arange(block)
+            qsel = jnp.where(take_a, qa, qb)
+            qpos = jnp.where(take_a, pos_a, pos_b)
+            s = jnp.einsum("bthgd,bshd->bhgts", qsel, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_old = jnp.where(take_a, ma, mb)
+            l_old = jnp.where(take_a, la, lb)
+            acc_old = jnp.where(take_a, acca, accb)
+            m_new = jnp.maximum(m_old, s.max(axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_old - m_new)
+            l_new = l_old * corr + pexp.sum(axis=-1)
+            pv = jnp.einsum("bhgts,bshd->bhgtd", pexp.astype(q.dtype), vblk)
+            acc_new = acc_old * corr[..., None].astype(acc_old.dtype) + \
+                pv.astype(jnp.float32)
+            ma = jnp.where(take_a, m_new, ma)
+            la = jnp.where(take_a, l_new, la)
+            acca = jnp.where(take_a, acc_new, acca)
+            mb = jnp.where(take_a, mb, m_new)
+            lb = jnp.where(take_a, lb, l_new)
+            accb = jnp.where(take_a, accb, acc_new)
+            return (ma, la, acca, mb, lb, accb), None
+
+        z = lambda *s_: jnp.zeros(s_, jnp.float32)
+        m0 = jnp.full((B, Hkv, G, block), -jnp.inf, jnp.float32)
+        carry0 = (m0, z(B, Hkv, G, block), z(B, Hkv, G, block, D),
+                  m0, z(B, Hkv, G, block), z(B, Hkv, G, block, D))
+        (ma, la, acca, mb, lb, accb), _ = lax.scan(
+            kv_step, carry0, jnp.arange(nq + 1))
+        outa = (acca / jnp.maximum(la[..., None], 1e-30))
+        outb = (accb / jnp.maximum(lb[..., None], 1e-30))
+        # (B,Hkv,G,block,D) -> (B,block,Hkv,G,D)
+        f = lambda o: o.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+        return None, (f(outa), f(outb))
+
+    _, (outs_a, outs_b) = lax.scan(pair_step, None, jnp.arange(nq // 2))
+    # outs_a rows: p = 0..nq/2-1; outs_b rows: nq-1-p (descending)
+    out = jnp.concatenate([outs_a, outs_b[::-1]], axis=0)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, H, D)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
+    """Single-step decode: q (B,1,H,D) over cache (B,S,Hkv,D); positions
+    >= cache_len are masked.  `window` additionally masks stale entries
+    (the SWA ring buffer keeps only `window` positions so S == window)."""
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)
+    valid = kpos[None, :] < cache_len[:, None]  # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+def select_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Pick exact vs blockwise path from the (static) sequence length.
+
+    Threshold 4096: a lower threshold was tried and REFUTED -- the XLA
+    blockwise path's scan carries round-trip HBM every kv step, so its
+    measured traffic is HIGHER than materialising (T,S) scores at 4k; true
+    flash locality needs the fused Pallas kernel (kernels/flash_attention,
+    TPU path).  Blockwise remains required above 4k where (T,S) scores
+    would not fit at all (EXPERIMENTS.md SSPerf, mixtral iteration 2)."""
+    T, S = q.shape[1], k.shape[1]
+    if max(T, S) <= 4096:
+        return attention_full(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    if (causal and not window and T == S and T % 1024 == 0
+            and (T // 1024) % 2 == 0):
+        # long causal prefill: triangular schedule halves attention FLOPs
+        return flash_attention_xla_triangular(q, k, v, q_offset=q_offset)
+    return flash_attention_xla(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+
+
+# --------------------------------------------------------------------------
+# Attention block (params + apply, train/prefill/decode)
+# --------------------------------------------------------------------------
+
+def attention_defs(cfg, d_model=None, cross=False):
+    d = d_model or cfg.d_model
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": pdef((d, H, Dh), ("embed", "heads", None), fan_in_axes=(0,)),
+        "wk": pdef((d, Hkv, Dh), ("embed", "kv_heads", None), fan_in_axes=(0,)),
+        "wv": pdef((d, Hkv, Dh), ("embed", "kv_heads", None), fan_in_axes=(0,)),
+        "wo": pdef((H, Dh, d), ("heads", None, "embed_tp"), fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = pdef((H, Dh), ("heads", None), init="zeros")
+        defs["bk"] = pdef((Hkv, Dh), ("kv_heads", None), init="zeros")
+        defs["bv"] = pdef((Hkv, Dh), ("kv_heads", None), init="zeros")
+    return defs
+
+
+def attention_apply(p, cfg, x, positions, *, mode="train", cache=None,
+                    kv_source=None, causal=True, window=None,
+                    is_cross=False):
+    """mode: train/prefill (full seq) or decode (T==1, uses cache).
+
+    Cross-attention (enc-dec): pass kv_source=enc_out in train/prefill, or
+    is_cross=True in decode (cache then holds the STATIC encoder K/V built
+    at prefill -- never updated, no RoPE).  Returns (out, new_cache).
+    """
+    is_cross = is_cross or kv_source is not None
+    window = cfg.window if window is None else window
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    # When heads don't divide the TP axis (e.g. 20H on a 16-way model axis)
+    # head-sharding is impossible and attention would run fully REPLICATED
+    # on every model shard.  Fall back to sequence/context parallelism: the
+    # q blocks shard over "model", k/v stay full, and the output re-gathers.
+    m = mesh_axis_size("model")
+    seq_cp = (cfg.num_heads % m != 0 and T % m == 0 and T > 1
+              and not is_cross)
+    q_axes = ("batch", ("model",), "heads", None) if seq_cp else \
+        ("batch", None, "heads", None)
+    q = constrain(q, q_axes)
+    if not is_cross:
+        q = rope_apply(q, positions, cfg.rope_theta, cfg.rope_fraction)
+
+    if is_cross and mode == "decode":
+        # static encoder K/V cache: read-only attention over enc_len
+        out = decode_attention(q, cache["k"], cache["v"], cache["len"])
+        out = constrain(out, ("batch", None, "heads", None))
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+        return constrain(y, ("batch", None, None)), cache
+
+    xs = kv_source if kv_source is not None else x
+    kk = jnp.einsum("bsd,dhk->bshk", xs, p["wk"])
+    vv = jnp.einsum("bsd,dhk->bshk", xs, p["wv"])
+    if "bk" in p:
+        kk = kk + p["bk"]
+        vv = vv + p["bv"]
+    if not is_cross:
+        kk = rope_apply(kk, positions, cfg.rope_theta, cfg.rope_fraction)
+
+    new_cache = cache
+    if mode == "decode":
+        k_cache, v_cache, cache_len = cache["k"], cache["v"], cache["len"]
+        S = k_cache.shape[1]
+        if window and S == window:
+            slots = (cache_len % window).astype(jnp.int32)  # ring buffer
+        else:
+            slots = cache_len.astype(jnp.int32)
+        # PER-BATCH slot writes (vmapped DUS): sequences at different
+        # positions coexist in one batch (continuous batching, serve_loop)
+        upd = jax.vmap(
+            lambda c, u, s: lax.dynamic_update_slice_in_dim(c, u, s, 0))
+        k_cache = upd(k_cache, kk.astype(k_cache.dtype), slots)
+        v_cache = upd(v_cache, vv.astype(v_cache.dtype), slots)
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window)
+        new_cache = {"k": k_cache, "v": v_cache, "len": cache_len + 1}
+    else:
+        out = select_attention(q, kk, vv, causal=causal and kv_source is None,
+                               window=window)
+        if mode == "prefill" and kv_source is None:
+            if window and kk.shape[1] >= window:
+                # ring buffer: keep exactly `window` positions; decode
+                # overwrites slot len % window (requires T % window == 0,
+                # true for all assigned shapes).
+                kc, vc = kk[:, -window:], vv[:, -window:]
+            else:
+                # full cache: pad headroom so decode steps have slots to
+                # write into (dynamic_update_slice clamps at the boundary).
+                pad = PREFILL_DECODE_MARGIN
+                kc = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {
+                "k": kc, "v": vc,
+                "len": jnp.full((B,), T, jnp.int32),
+            }
+    out = constrain(out, q_axes if seq_cp else ("batch", None, "heads", None))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return constrain(y, ("batch", None, None)), new_cache
+
+
+def attention_cache_defs(cfg, batch, seq_len):
+    """Abstract KV-cache leaves for decode dry-runs (per layer).
+
+    Sharding: kv heads over "model" when divisible (canonical TP decode),
+    else the SEQUENCE dim shards over "model" (context parallelism): the
+    baseline Dh-sharded layout made XLA all-gather the whole cache in f32
+    every layer (68 GB/step for minitron decode_32k; SSPerf iteration)."""
+    keep = min(cfg.window, seq_len) if cfg.window else seq_len
+    kv = (batch, keep, cfg.num_kv_heads, cfg.head_dim)
+    ax = ("batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
+        "v": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
+        "len": pdef((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
+# --------------------------------------------------------------------------
+# Dense MLP (gated or plain)
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg):
+    gated = cfg.act in ("silu", "gelu")
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": pdef((d, f), ("embed", "ffn"), fan_in_axes=(0,)),
+        "w_down": pdef((f, d), ("ffn", "embed_tp"), fan_in_axes=(0,)),
+    }
+    if gated:
+        defs["w_gate"] = pdef((d, f), ("embed", "ffn"), fan_in_axes=(0,))
+    return defs
+
+
+def mlp_apply(p, cfg, x):
+    h = jnp.einsum("btd,df->btf", x, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    h = constrain(h, ("batch", None, "ffn"))
+    return jnp.einsum("btf,fd->btd", h, p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# MoE (gather-based dispatch: no (T,E,C) one-hot einsum FLOPs)
+# --------------------------------------------------------------------------
+
+def moe_defs(cfg):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    return {
+        "w_router": pdef((d, E), ("embed", None), dtype=jnp.float32,
+                         fan_in_axes=(0,)),
+        "w_gate": pdef((E, d, f), ("experts", "embed", "expert_ffn"),
+                       fan_in_axes=(1,)),
+        "w_up": pdef((E, d, f), ("experts", "embed", "expert_ffn"),
+                     fan_in_axes=(1,)),
+        "w_down": pdef((E, f, d), ("experts", "expert_ffn", "embed"),
+                       fan_in_axes=(1,)),
+    }
+
+
+def moe_capacity(cfg, tokens: int) -> int:
+    c = int(math.ceil(tokens * cfg.experts_per_token / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _moe_groups(B: int, T: int, min_tokens: int = 2048) -> int:
+    """Largest divisor of B keeping >= min_tokens tokens per group.
+
+    The GROUP dimension is the key to sharded dispatch: routing/capacity is
+    computed per group and groups shard over the data axis, so the expert
+    einsums are (G, E, C_g, d) with G sharded -- WITHOUT it, the (E, C)
+    dispatch is global and GSPMD replicates the whole expert computation on
+    every data shard (measured 16x FLOP blowup; EXPERIMENTS.md SSPerf)."""
+    g = B
+    while g > 1 and (B * T) // g < min_tokens:
+        g //= 2
+    while B % g != 0:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_apply(p, cfg, x):
+    """Top-k routed expert MLP with per-group capacity + token dropping.
+
+    Dispatch/combine are GATHERS (memory movement), not one-hot einsums, so
+    HLO FLOPs stay proportional to active-expert compute.
+    """
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    n = B * T
+    G = _moe_groups(B, T)
+    ng = n // G
+    C = moe_capacity(cfg, ng)
+    xg = x.reshape(G, ng, d)
+
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32), p["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gval, gidx = lax.top_k(probs, k)                     # (G,ng,k)
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert, per group:
+    # slot-major cumsum so choice 0 of token t beats choice 1 of token t.
+    onehot = jax.nn.one_hot(gidx, E, dtype=jnp.int32)    # (G,ng,k,E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * ng, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat
+    pos = (pos_flat.reshape(G, k, ng, E).transpose(0, 2, 1, 3)
+           * onehot).sum(-1)                             # (G,ng,k)
+    keep = pos < C
+
+    # slot_token[g, e, c] = source token index within group (ng == padding)
+    gg = jnp.arange(G, dtype=jnp.int32)[:, None]
+    e_flat = jnp.where(keep, gidx, E).reshape(G, -1)
+    c_flat = jnp.where(keep, pos, 0).reshape(G, -1)
+    tok = jnp.broadcast_to(jnp.arange(ng, dtype=jnp.int32)[None, :, None],
+                           (G, ng, k)).reshape(G, -1)
+    slot_token = jnp.full((G, E + 1, C), ng, jnp.int32)
+    slot_token = slot_token.at[gg, e_flat, c_flat].set(tok, mode="drop")
+    slot_token = slot_token[:, :E]
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad[:, :, None, :],                            # (G,ng+1,1,d)
+        slot_token.reshape(G, -1)[:, :, None, None], axis=1
+    ).reshape(G, E, C, d)                                # local gather per G
+    xe = constrain(xe, ("batch", "experts", None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = act_fn(cfg.act)(g_) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])    # (G,E,C,d)
+    ye = constrain(ye, ("batch", "experts", None, None))
+
+    # combine: gather each token-choice's slot output, weight, sum over k
+    ye_flat = jnp.concatenate(
+        [ye.reshape(G, E * C, d), jnp.zeros((G, 1, d), ye.dtype)], axis=1)
+    slot_id = jnp.where(keep, gidx * C + pos, E * C)     # (G,ng,k)
+    yk = jnp.take_along_axis(
+        ye_flat[:, :, None, :],
+        slot_id.reshape(G, -1)[:, :, None, None], axis=1
+    ).reshape(G, ng, k, d)
+    y = jnp.einsum("gnkd,gnk->gnd", yk, gval.astype(yk.dtype) * keep)
+    aux = _load_balance_loss(probs.reshape(n, E),
+                             onehot.reshape(n, k, E), E, k)
+    return y.reshape(B, T, d), aux
+
+
+def _load_balance_loss(probs, onehot, E, k):
+    """Switch-style auxiliary loss: E * sum(frac_tokens * frac_probs)."""
+    frac_tokens = onehot.sum(axis=(0, 1)).astype(jnp.float32) / (
+        probs.shape[0] * k)
+    frac_probs = probs.mean(axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_defs(cfg):
+    # The INPUT table is sharded only on d_model (over data x model jointly):
+    # a gather over a vocab-sharded table triggers SPMD "involuntary full
+    # rematerialization" (replicates the gathered activations); the OUTPUT
+    # projection contracts d_model, so vocab-sharding is fine there.
+    defs = {"tok": pdef((cfg.vocab_size, cfg.d_model),
+                        (None, ("data", "model")), init="embed")}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = pdef((cfg.d_model, cfg.vocab_size),
+                               ("embed", "vocab"), fan_in_axes=(0,))
+    return defs
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_apply(p, x):
+    """Logits stay in activation dtype (bf16): with 150k+ vocabs an fp32
+    (B,T,V) tensor would dominate memory; the loss reduces in fp32."""
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    return jnp.einsum("btd,dv->btv", x, w)

@@ -1,0 +1,86 @@
+"""Parameter-definition pytrees.
+
+A model is described by a pytree of ParamDef leaves (shape + dtype + logical
+axes + initializer).  From one definition tree we derive:
+  * abstract params  (ShapeDtypeStruct, for the AOT dry-run -- no allocation)
+  * concrete params  (for CPU smoke tests / the FL simulator)
+  * PartitionSpecs   (via dist.sharding rules, for pjit in/out shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dtype: jnp.dtype
+    logical_axes: tuple
+    init: str = "normal"   # "normal" | "zeros" | "ones" | "embed" | "scalar:<v>"
+    fan_in_axes: tuple[int, ...] = ()  # dims contributing to fan-in for scaling
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def pdef(shape: Sequence[int], axes: Sequence, dtype=jnp.bfloat16,
+         init: str = "normal", fan_in_axes: Sequence[int] = ()) -> ParamDef:
+    return ParamDef(tuple(int(s) for s in shape), jnp.dtype(dtype), tuple(axes),
+                    init, tuple(fan_in_axes))
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(defs):
+    return jax.tree.map(lambda d: d.abstract(), defs, is_leaf=is_def)
+
+
+def init_leaf(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init.startswith("scalar:"):
+        v = float(d.init.split(":")[1])
+        return jnp.full(d.shape, v, d.dtype)
+    if d.init == "embed":
+        scale = 1.0
+    else:
+        fan_in = 1
+        for ax in (d.fan_in_axes or range(max(len(d.shape) - 1, 1))):
+            fan_in *= d.shape[ax] if ax < len(d.shape) else 1
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def init_params(key, defs):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_defs(defs, n: int):
+    """Prepend a stacked `layers` axis of size n to every leaf (for scan)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, d.dtype, ("layers",) + d.logical_axes,
+                           d.init, tuple(a + 1 for a in d.fan_in_axes)),
+        defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def param_bytes(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves))

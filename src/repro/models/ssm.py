@@ -1,0 +1,188 @@
+"""Mamba-1 style selective SSM (falcon-mamba-7b backbone).
+
+The selective scan is a diagonal first-order linear recurrence
+    h_t = a_t * h_{t-1} + b_t,     a_t = exp(dt_t * A),  b_t = dt_t B_t x_t
+evaluated with a CHUNKED scan: an outer `lax.scan` over sequence chunks
+(carrying h) and an inner `associative_scan` within the chunk, so the
+(B, T, d_inner, N) state trajectory is never materialised for the full
+sequence -- the pure-XLA analogue of the fused CUDA selective-scan, and the
+same blocking the Pallas `linrec` kernel uses on TPU.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.param import pdef, stack_defs
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_defs(cfg):
+    d, di, N, w = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    r = _dt_rank(cfg)
+    return {
+        "w_in": pdef((d, 2 * di), ("embed", "ssm_inner"), fan_in_axes=(0,)),
+        "conv_w": pdef((w, di), (None, "ssm_inner")),
+        "conv_b": pdef((di,), ("ssm_inner",), init="zeros"),
+        "w_x": pdef((di, r + 2 * N), ("ssm_inner", None), fan_in_axes=(0,)),
+        "w_dt": pdef((r, di), (None, "ssm_inner"), fan_in_axes=(0,)),
+        "b_dt": pdef((di,), ("ssm_inner",), init="scalar:-4.6"),  # softplus->~0.01
+        "a_log": pdef((di, N), ("ssm_inner", None), dtype=jnp.float32,
+                      init="scalar:0.5"),
+        "d_skip": pdef((di,), ("ssm_inner",), dtype=jnp.float32, init="ones"),
+        "w_out": pdef((di, d), ("ssm_inner", "embed_tp"), fan_in_axes=(0,)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifts (GSPMD-friendly). x: (B,T,di)."""
+    width = w.shape[0]
+    y = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for i in range(width):
+        shifted = jnp.pad(x, ((0, 0), (width - 1 - i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _chunked_linear_scan(a, b, h0, chunk):
+    """h_t = a_t*h_{t-1} + b_t over axis 1. a,b: (B,T,...), h0: (B,...)."""
+    B, T = a.shape[0], a.shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nch = T // chunk
+    ar = a.reshape((B, nch, chunk) + a.shape[2:]).swapaxes(0, 1)
+    br = b.reshape((B, nch, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def chunk_step(h, ab):
+        ac, bc = ab  # (B, chunk, ...)
+        Acum, Bcum = lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = Acum * h[:, None] + Bcum        # (B, chunk, ...)
+        return hs[:, -1], hs
+
+    hT, ys = lax.scan(chunk_step, h0, (ar, br))
+    ys = ys.swapaxes(0, 1).reshape((B, T) + a.shape[2:])
+    return ys, hT
+
+
+def _ssm_inner(p, cfg, xc, z, h0, *, chunk=256):
+    """xc: conv+silu output (B,T,di); returns (y (B,T,d_inner), hT)."""
+    N, r = cfg.ssm_state, _dt_rank(cfg)
+    xdb = jnp.einsum("btd,dr->btr", xc, p["w_x"])
+    _, _, C_ssm = jnp.split(xdb, [r, r + N], axis=-1)
+    a, b = _ab(p, cfg, xc)                                     # (B,T,di,N)
+    hs, hT = _chunked_linear_scan(a, b, h0, chunk)
+    y = jnp.einsum("btdn,btn->btd", hs, C_ssm.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype)
+    return y, hT
+
+
+def mamba_apply(p, cfg, x, *, mode="train", cache=None):
+    """x: (B,T,d). Returns (out, new_cache)."""
+    B, T, _ = x.shape
+    di, N, w = cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, ("batch", None, "ssm_inner"))
+
+    if mode == "decode":
+        conv_st, h0 = cache["conv"], cache["h"]          # (B,w-1,di), (B,di,N)
+        win = jnp.concatenate([conv_st, xi], axis=1)     # (B,w,di)
+        xc = jnp.einsum("bwd,wd->bd", win.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32))
+        xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))
+        xc = xc.astype(x.dtype)[:, None]                 # (B,1,di)
+        y, hT = _ssm_inner(p, cfg, xc, z, h0, chunk=1)
+        new_cache = {"conv": win[:, 1:], "h": hT, "len": cache["len"] + 1}
+    else:
+        xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"])
+                         .astype(jnp.float32)).astype(x.dtype)
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        y, hT = _ssm_inner(p, cfg, xc, z, h0)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "conv": xi[:, -(w - 1):],
+                "h": hT,
+                "len": jnp.full((B,), T, jnp.int32),
+            }
+    out = jnp.einsum("btd,de->bte", y, p["w_out"])
+    return constrain(out, ("batch", None, None)), new_cache
+
+
+def _ab(p, cfg, xc):
+    N, r = cfg.ssm_state, _dt_rank(cfg)
+    xdb = jnp.einsum("btd,dr->btr", xc, p["w_x"])
+    dt_lowrank, B_ssm, _ = jnp.split(xdb, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_lowrank, p["w_dt"]).astype(jnp.float32)
+        + p["b_dt"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)
+    b = (dt * xc.astype(jnp.float32))[..., None] * \
+        B_ssm.astype(jnp.float32)[:, :, None, :]
+    return a, b
+
+
+def ssm_block_defs(cfg):
+    return {"ln": L.norm_defs(cfg), "mamba": mamba_defs(cfg)}
+
+
+def ssm_lm_defs(cfg):
+    return {
+        "embed": L.embed_defs(cfg),
+        "layers": stack_defs(ssm_block_defs(cfg), cfg.num_layers),
+        "final_norm": L.norm_defs(cfg),
+    }
+
+
+def ssm_cache_defs(cfg, batch: int, seq_len: int):
+    per_layer = {
+        "conv": pdef((batch, cfg.conv_width - 1, cfg.d_inner),
+                     ("batch", None, "ssm_inner"), init="zeros"),
+        "h": pdef((batch, cfg.d_inner, cfg.ssm_state),
+                  ("batch", "ssm_inner", None), dtype=jnp.float32,
+                  init="zeros"),
+        "len": pdef((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+    return stack_defs(per_layer, cfg.num_layers)
+
+
+def ssm_lm_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
+    tokens = batch_inputs["tokens"]
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, ("batch", None, None))
+
+    def body(carry, xs):
+        x = carry
+        lp, lc = xs if mode == "decode" else (xs, None)
+        h = L.apply_norm(lp["ln"], x, cfg.norm)
+        y, new_cache = mamba_apply(lp["mamba"], cfg, h, mode=mode, cache=lc)
+        return x + y, new_cache
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["layers"], cache) if mode == "decode" else params["layers"]
+    x, new_cache = lax.scan(body, x, xs)
+    if mode == "prefill":
+        x = x[:, -1:]  # serving needs only the last position's logits
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed_apply(params["embed"], x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    if mode == "train":
+        return logits, 0.0
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, sgd_momentum, apply_updates,
+                                    opt_state_defs, global_norm, clip_by_global_norm)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup

@@ -1,0 +1,111 @@
+"""Pure-JAX optimizers with shardable pytree state.
+
+State mirrors the parameter pytree (same logical axes -> same sharding);
+moments are fp32 regardless of param dtype.  Params stay bf16 and the
+update is computed in fp32 ('pure bf16 + fp32 moments'; see DESIGN.md --
+the fp32-master variant is a config flag the dry-run memory table reports).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef, is_def
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable          # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = lr_fn(c)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * step)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: Callable | float, *, momentum=0.9,
+                 nesterov=False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = lr_fn(c)
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mom"], grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -(lr_t) * (momentum * m + g.astype(jnp.float32)),
+                mom, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, mom)
+        return upd, {"mom": mom, "count": c}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def opt_state_defs(param_defs, optimizer: str = "adamw"):
+    """ParamDef tree for the optimizer state (for dry-run shardings)."""
+    def f32(d: ParamDef) -> ParamDef:
+        return ParamDef(d.shape, jnp.dtype(jnp.float32), d.logical_axes,
+                        "zeros", d.fan_in_axes)
+
+    moments = {"adamw": ("mu", "nu"), "sgd": ("mom",)}[optimizer]
+    out = {name: jax.tree.map(f32, param_defs, is_leaf=is_def)
+           for name in moments}
+    out["count"] = ParamDef((), jnp.dtype(jnp.int32), (), "zeros")
+    return out

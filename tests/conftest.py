@@ -1,0 +1,25 @@
+import os
+
+# Smoke tests and benches must see the real (1-device) CPU platform; only
+# launch/dryrun.py forces 512 host devices (per its own first lines).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def synmnist():
+    from repro.data.synthetic import make_classification_set
+    return make_classification_set("synmnist", 4096, seed=1)
+
+
+@pytest.fixture(scope="session")
+def synmnist_test():
+    from repro.data.synthetic import make_classification_set
+    return make_classification_set("synmnist", 1024, seed=2)

@@ -1,0 +1,140 @@
+"""Property + unit tests for the aggregation algorithms (paper SSII-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+def tiny_tree(key, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.key(key))
+    return {
+        "w": jax.random.normal(k1, (4, 3)) * scale,
+        "b": {"x": jax.random.normal(k2, (5,)) * scale},
+    }
+
+
+# ---------------- weighting schemes ----------------
+
+@given(st.lists(st.floats(1.0, 1e4), min_size=1, max_size=12),
+       st.sampled_from(["uniform", "fedavg", "linear", "polynomial",
+                        "exponential"]))
+def test_weights_normalised(n_data, scheme):
+    s = np.arange(len(n_data), dtype=float)
+    w = agg.aggregation_weights(scheme, n_data, staleness=s)
+    assert w.shape == (len(n_data),)
+    assert np.all(w >= 0)
+    assert abs(w.sum() - 1.0) < 1e-9
+
+
+@given(st.integers(2, 8))
+def test_staleness_discounts_monotone(n):
+    """Fresher workers must never get less weight (equal data)."""
+    for scheme in ("linear", "polynomial", "exponential"):
+        w = agg.aggregation_weights(scheme, [10.0] * n,
+                                    staleness=np.arange(n))
+        assert np.all(np.diff(w) <= 1e-12), (scheme, w)
+
+
+def test_fedavg_proportional_to_data():
+    w = agg.aggregation_weights("fedavg", [1, 3])
+    np.testing.assert_allclose(w, [0.25, 0.75])
+
+
+def test_all_stale_falls_back_to_uniform():
+    w = agg.aggregation_weights("linear", [1, 1], staleness=[100, 100])
+    np.testing.assert_allclose(w, [0.5, 0.5])
+
+
+# ---------------- pytree merges ----------------
+
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_weighted_average_convex_bounds(k, seed):
+    rng = np.random.default_rng(seed)
+    trees = [tiny_tree(i) for i in range(k)]
+    w = rng.dirichlet([1.0] * k)
+    out = agg.weighted_average(trees, w)
+    for leaf_out, *leaves in zip(jax.tree.leaves(out),
+                                 *(jax.tree.leaves(t) for t in trees)):
+        stack = np.stack([np.asarray(l) for l in leaves])
+        assert np.all(np.asarray(leaf_out) <= stack.max(0) + 1e-5)
+        assert np.all(np.asarray(leaf_out) >= stack.min(0) - 1e-5)
+
+
+def test_weighted_average_permutation_invariant():
+    trees = [tiny_tree(i) for i in range(3)]
+    w = np.array([0.2, 0.3, 0.5])
+    a = agg.weighted_average(trees, w)
+    b = agg.weighted_average([trees[2], trees[0], trees[1]],
+                             [0.5, 0.2, 0.3])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_weighted_average_identity():
+    t = tiny_tree(0)
+    out = agg.weighted_average([t, t, t], [0.1, 0.4, 0.5])
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_async_merge_interpolates():
+    a, b = tiny_tree(1), tiny_tree(2)
+    out = agg.async_merge(a, b, 0.25)
+    for o, x, y in zip(jax.tree.leaves(out), jax.tree.leaves(a),
+                       jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(o), 0.75 * np.asarray(x) + 0.25 * np.asarray(y),
+            rtol=1e-5)
+
+
+@given(st.floats(0.0, 50.0))
+def test_staleness_alpha_decays(s):
+    a0 = agg.staleness_alpha(0.6, 0.0)
+    a = agg.staleness_alpha(0.6, s)
+    assert 0.0 <= a <= a0 + 1e-12
+
+
+# ---------------- mixing matrices (Tier B) ----------------
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_mixing_matrices_row_stochastic(P, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.dirichlet([1.0] * P)
+    M = agg.sync_mixing_matrix(w)
+    np.testing.assert_allclose(M.sum(1), 1.0)
+    alphas = rng.uniform(0, 1, P)
+    contrib = rng.uniform(0, 1, P) + 1e-3
+    M2 = agg.async_mixing_matrix(alphas, contrib)
+    np.testing.assert_allclose(M2.sum(1), 1.0)
+    assert np.all(M2 >= -1e-12)
+
+
+def test_mix_islands_matches_manual():
+    P = 3
+    stacked = {"w": jnp.arange(P * 4, dtype=jnp.float32).reshape(P, 4)}
+    M = jnp.asarray(np.random.default_rng(0).dirichlet([1] * P, size=P),
+                    jnp.float32)
+    out = agg.mix_islands(stacked, M)
+    want = np.asarray(M) @ np.asarray(stacked["w"])
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-5)
+
+
+def test_sync_mix_islands_consensus():
+    """After a sync exchange every island holds the same average."""
+    P = 4
+    stacked = {"w": jnp.asarray(
+        np.random.default_rng(1).normal(size=(P, 7)), jnp.float32)}
+    w = np.full(P, 1.0 / P)
+    out = agg.mix_islands(stacked, jnp.asarray(agg.sync_mixing_matrix(w),
+                                               jnp.float32))
+    arr = np.asarray(out["w"])
+    for i in range(1, P):
+        np.testing.assert_allclose(arr[i], arr[0], rtol=1e-5)
+    np.testing.assert_allclose(arr[0], np.asarray(stacked["w"]).mean(0),
+                               rtol=1e-5)

@@ -1,0 +1,57 @@
+"""int8 delta compression: error bounds + error-feedback unbiasedness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+def test_quant_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, s = comp.quantize_blockwise(x, block=256)
+    deq = comp.dequantize_blockwise(q, s, x.shape)
+    # per-block error <= scale/2 = amax/254
+    err = np.abs(np.asarray(deq - x))
+    scales = np.repeat(np.asarray(s), 256)[: n]
+    assert np.all(err <= scales / 2 + 1e-7)
+
+
+def test_tree_roundtrip_structure():
+    t = {"a": jnp.ones((3, 5), jnp.bfloat16), "b": jnp.zeros(7)}
+    c = comp.compress_tree(t)
+    out = comp.decompress_tree(c)
+    assert out["a"].shape == (3, 5) and str(out["a"].dtype) == "bfloat16"
+    np.testing.assert_allclose(np.asarray(out["b"]), 0.0)
+
+
+def test_compressed_bytes_smaller():
+    t = {"w": jnp.ones((1024, 64), jnp.float32)}
+    raw = 1024 * 64 * 4
+    assert comp.compressed_bytes(t) < raw / 3
+
+
+def test_error_feedback_unbiased_over_rounds():
+    """sum of decompressed sends ~ sum of true deltas (EF-SGD property)."""
+    rng = np.random.default_rng(0)
+    like = {"w": jnp.zeros((512,), jnp.float32)}
+    ef = comp.ErrorFeedback(like)
+    total_true = np.zeros(512)
+    total_sent = np.zeros(512)
+    for i in range(30):
+        delta = {"w": jnp.asarray(rng.normal(size=512) * 0.01, jnp.float32)}
+        ctree = ef.compress(delta)
+        sent = comp.decompress_tree(jax.tree.map(
+            lambda d: dict(d, dtype="float32"), ctree,
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+        total_true += np.asarray(delta["w"])
+        total_sent += np.asarray(sent["w"])
+    resid = np.abs(np.asarray(ef.residual["w"]))
+    np.testing.assert_allclose(total_sent + np.asarray(ef.residual["w"]),
+                               total_true, atol=1e-4)
+    assert resid.max() < 0.01  # residual stays bounded (no drift)

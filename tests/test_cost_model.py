@@ -1,0 +1,49 @@
+"""Tests for the Eq. 4 cost model."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.integers(1, 10_000), st.floats(0.1, 1.0), st.floats(1e9, 4e9))
+def test_estimate_scales(n_data, prop, freq):
+    p = cm.WorkerProfile(wid=0, cpu_freq=freq, cpu_prop=prop, n_data=n_data)
+    t = cm.estimate_t_one(p, t_onedata_server=1e-3, server_freq=2e9)
+    t2 = cm.estimate_t_one(
+        cm.WorkerProfile(wid=0, cpu_freq=freq, cpu_prop=prop,
+                         n_data=2 * n_data),
+        t_onedata_server=1e-3, server_freq=2e9)
+    assert t >= 0
+    assert np.isclose(t2, 2 * t)          # linear in data size (Eq. 4)
+
+
+def test_contention_slows_worker():
+    base = dict(wid=0, cpu_freq=2e9, n_data=100)
+    fast = cm.estimate_t_one(cm.WorkerProfile(cpu_prop=1.0, **base),
+                             t_onedata_server=1e-3, server_freq=2e9)
+    slow = cm.estimate_t_one(cm.WorkerProfile(cpu_prop=0.5, **base),
+                             t_onedata_server=1e-3, server_freq=2e9)
+    assert slow > fast
+
+
+def test_observe_ewma_converges():
+    s = cm.WorkerStats(wid=0, t_one=100.0, t_transmit=10.0, n_data=5)
+    for _ in range(20):
+        s.observe(1.0, 0.1)
+    assert abs(s.t_one - 1.0) < 1e-3      # estimates -> measurements
+    assert abs(s.t_transmit - 0.1) < 1e-4
+
+
+def test_heterogeneous_profiles_deterministic():
+    a = cm.heterogeneous_profiles(5, [10] * 5, seed=3)
+    b = cm.heterogeneous_profiles(5, [10] * 5, seed=3)
+    assert all(x.speed_factor == y.speed_factor for x, y in zip(a, b))
+    assert all(1.0 <= p.speed_factor <= 4.0 for p in a)
+
+
+def test_transmit_time_positive_and_monotone_in_bytes():
+    p = cm.WorkerProfile(wid=0, bandwidth=1e6)
+    assert p.true_t_transmit(10**6) < p.true_t_transmit(10**7)

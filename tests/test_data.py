@@ -1,0 +1,72 @@
+"""Federated data pipeline tests (Tables III/IV + partitioners)."""
+import numpy as np
+import pytest
+
+from repro.data.partition import (dirichlet_partition, paper_table3,
+                                  paper_table4, partition_by_batches)
+from repro.data.synthetic import (batch_token_stream,
+                                  make_classification_set, make_token_stream)
+
+
+def test_table3_totals_match_paper():
+    # configs 1-3 share one total; 4-6 share another (paper SSIV-A)
+    for cfgs, total in (((1, 2, 3), 10), ((4, 5, 6), 100)):
+        for c in cfgs:
+            kind, rows = paper_table3(c)
+            assert len(rows) == 10
+            assert sum(rows) == total, (c, rows)
+    assert paper_table3(1)[0] == "synmnist"
+    assert paper_table3(4)[0] == "syncifar"
+
+
+def test_table4_totals_match_paper():
+    for cfgs, total in (((1, 2, 3), 30), ((4, 5, 6), 300)):
+        for c in cfgs:
+            kind, rows = paper_table4(c)
+            assert len(rows) == 30
+            assert sum(rows) == total, (c, rows)
+
+
+def test_sequential_configs_put_all_data_on_w1():
+    for table, cfg in ((paper_table3, 1), (paper_table3, 4),
+                       (paper_table4, 1), (paper_table4, 4)):
+        _, rows = table(cfg)
+        assert rows[0] == sum(rows)
+
+
+def test_partition_disjoint_and_sized():
+    imgs, labels = make_classification_set("synmnist", 2048, seed=0)
+    shards = partition_by_batches(imgs, labels, [4, 0, 2], batch_size=64,
+                                  seed=1)
+    assert [s[0].shape[0] for s in shards] == [256, 0, 128]
+    # disjointness via fingerprints
+    fps = [set(map(lambda a: a.tobytes()[:64], s[0])) for s in shards if
+           len(s[0])]
+    assert not (fps[0] & fps[1])
+
+
+def test_dirichlet_partition_covers_all():
+    imgs, labels = make_classification_set("synmnist", 1024, seed=0)
+    shards = dirichlet_partition(imgs, labels, 5, alpha=0.5, seed=0)
+    assert sum(s[0].shape[0] for s in shards) == 1024
+
+
+def test_classification_set_learnable_classes():
+    imgs, labels = make_classification_set("synmnist", 512, seed=0)
+    assert imgs.shape == (512, 28, 28, 1)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    assert len(np.unique(labels)) == 10
+    # class means must differ (prototype structure present)
+    m0 = imgs[labels == 0].mean(0)
+    m1 = imgs[labels == 1].mean(0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+def test_token_stream_batching_deterministic():
+    s = make_token_stream(1000, 100_000, seed=0)
+    assert s.min() >= 0 and s.max() < 1000
+    x1, y1 = batch_token_stream(s, 4, 128, step=3)
+    x2, y2 = batch_token_stream(s, 4, 128, step=3)
+    np.testing.assert_array_equal(x1, x2)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(x1.reshape(-1)[1:], y1.reshape(-1)[:-1])

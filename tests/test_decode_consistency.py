@@ -1,0 +1,85 @@
+"""Decode-path correctness: prefill + single-token decode must reproduce the
+teacher-forced logits at the next position (per model family).
+
+This is the strongest serving-correctness test we can run on CPU: it
+exercises KV caches, ring buffers (SWA), SSM/RG-LRU state carry, and the
+cross-attention cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+# one representative per decode code path
+FAMILIES = [
+    "granite-20b",            # dense MQA, full attention
+    "chatglm3-6b",            # GQA + partial rope + qkv bias
+    "qwen3-moe-235b-a22b",    # MoE decode
+    "falcon-mamba-7b",        # SSM state
+    "recurrentgemma-9b",      # hybrid RG-LRU + local attention ring
+    "seamless-m4t-large-v2",  # enc-dec with cross-attention cache
+]
+
+
+def _batch(model, T, B=2, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = model.cfg
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)),
+                               jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)), jnp.bfloat16)
+    if cfg.is_encdec:
+        b["frames"] = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)),
+                                  jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefill_then_decode_matches_teacher_forcing(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    T, B = 16, 2
+    full = _batch(model, T + 1, B)
+
+    # teacher-forced reference: logits at position T-? -> prediction for
+    # position T given tokens[:T]; compare logits AT the last position.
+    tf_in = {k: (v[:, : T] if k in ("tokens",) else v)
+             for k, v in full.items()}
+    # run T+1 tokens through train mode, take logits at index T
+    ref_logits, _ = model.apply(params, full, mode="train")
+    ref_last = np.asarray(ref_logits[:, T, :], np.float32)
+
+    # prefill on T tokens, then decode token T
+    _, cache = model.apply(params, tf_in, mode="prefill")
+    dec_in = {"tokens": full["tokens"][:, T: T + 1],
+              "positions": jnp.full((B, 1), T, jnp.int32)}
+    dec_logits, _ = model.apply(params, dec_in, mode="decode", cache=cache)
+    got = np.asarray(dec_logits[:, 0, :], np.float32)
+
+    np.testing.assert_allclose(got, ref_last, rtol=2e-2, atol=2e-2)
+
+
+def test_multi_step_decode_consistent():
+    """Three consecutive decode steps match teacher forcing (dense arch)."""
+    cfg = get_smoke_config("granite-20b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    B, T, extra = 2, 12, 3
+    full = _batch(model, T + extra, B)
+    ref_logits, _ = model.apply(params, full, mode="train")
+
+    pre = {"tokens": full["tokens"][:, :T]}
+    _, cache = model.apply(params, pre, mode="prefill")
+    for i in range(extra):
+        dec_in = {"tokens": full["tokens"][:, T + i: T + i + 1],
+                  "positions": jnp.full((B, 1), T + i, jnp.int32)}
+        logits, cache = model.apply(params, dec_in, mode="decode",
+                                    cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(ref_logits[:, T + i], np.float32),
+            rtol=2e-2, atol=2e-2)

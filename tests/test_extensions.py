@@ -1,0 +1,122 @@
+"""Beyond-paper extensions: FedOpt server optimizers, utility selection,
+elastic island rescale on resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federated as fed
+from repro.core.cost_model import WorkerStats
+from repro.core.selection import select_utility
+from repro.core.server_opt import ServerOptimizer
+
+
+def trees(k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+            for _ in range(k)]
+
+
+# ---------------- FedOpt server optimizers ----------------
+
+def test_server_avg_matches_weighted_average():
+    from repro.core.aggregation import weighted_average
+    opt = ServerOptimizer("avg")
+    ts = trees(3)
+    st = opt.init(ts[0])
+    new, _ = opt.apply(ts[0], ts, [0.2, 0.3, 0.5], st)
+    want = weighted_average(ts, [0.2, 0.3, 0.5])
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want["w"]),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["avgm", "adam", "yogi"])
+def test_server_opt_moves_toward_worker_consensus(method):
+    opt = ServerOptimizer(method, lr=0.5)
+    server = {"w": jnp.zeros((6,), jnp.float32)}
+    target = {"w": jnp.ones((6,), jnp.float32)}
+    st = opt.init(server)
+    d0 = float(jnp.abs(server["w"] - target["w"]).mean())
+    for _ in range(30):
+        server, st = opt.apply(server, [target, target], [0.5, 0.5], st)
+    d1 = float(jnp.abs(server["w"] - target["w"]).mean())
+    assert d1 < 0.2 * d0, (method, d0, d1)
+
+
+def test_server_opt_state_shapes():
+    opt = ServerOptimizer("adam")
+    st = opt.init({"w": jnp.zeros((4, 2), jnp.bfloat16)})
+    assert st.momentum["w"].shape == (4, 2)
+    assert st.momentum["w"].dtype == jnp.float32
+
+
+# ---------------- utility (Oort-style) selection ----------------
+
+def _stats(t_ones, n_data):
+    return {i: WorkerStats(i, t, 0.1, n)
+            for i, (t, n) in enumerate(zip(t_ones, n_data))}
+
+
+def test_utility_selection_prefers_useful_workers():
+    s = _stats([1.0, 1.0, 1.0, 10.0], [100, 100, 100, 100])
+    util = {0: 0.1, 1: 5.0, 2: 0.1, 3: 5.0}  # 1 useful+fast; 3 useful+slow
+    sel = select_utility(s, 2, utilities=util, explore=0.0)
+    # useful workers beat useless ones, even a slow useful one (Oort's
+    # statistical-utility tradeoff); the fast useful worker ranks first
+    assert sel == [1, 3]
+    # with k=1 only the fast useful worker survives
+    assert select_utility(s, 1, utilities=util, explore=0.0) == [1]
+
+
+def test_utility_selection_explores():
+    s = _stats([1.0] * 10, [10] * 10)
+    util = {i: (10.0 if i == 0 else 0.01) for i in range(10)}
+    rng = np.random.default_rng(0)
+    picks = set()
+    for _ in range(20):
+        picks.update(select_utility(s, 3, utilities=util, explore=0.5,
+                                    rng=rng))
+    assert len(picks) > 4  # exploration reaches beyond the top utilities
+
+
+def test_utility_selection_k_bounds():
+    s = _stats([1.0, 2.0], [1, 1])
+    assert len(select_utility(s, 5, utilities={})) == 2
+    assert select_utility({}, 3, utilities={}) == []
+
+
+# ---------------- elastic island rescale on resume ----------------
+
+def test_elastic_island_rescale_roundtrip(tmp_path):
+    """Checkpoint written with 2 islands restores onto 4 (and back to 1):
+    the FL aggregate is the natural consolidation point (DESIGN.md SS7)."""
+    from repro.checkpoint import CheckpointManager
+
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8,)),
+                               jnp.float32)}
+    stacked2 = fed.stack_islands(params, 2)
+    # islands diverge a little
+    stacked2 = jax.tree.map(
+        lambda x: x + jnp.arange(2, dtype=jnp.float32)[:, None], stacked2)
+
+    mgr = CheckpointManager(tmp_path)
+    # consolidate-then-save: one sync exchange makes islands identical
+    M = jnp.asarray(fed.selection_mixing(np.array([0.5, 0.5]), np.ones(2)),
+                    jnp.float32)
+    consolidated = fed.fl_aggregate(stacked2, M)
+    mgr.save(7, params=fed.island_slice(consolidated, 0),
+             extra={"islands_at_save": 2})
+
+    # restore to FOUR islands
+    _, restored, _, _ = mgr.restore(params_like=params)
+    stacked4 = fed.stack_islands(jax.tree.map(jnp.asarray, restored), 4)
+    assert stacked4["w"].shape == (4, 8)
+    for i in range(4):
+        np.testing.assert_allclose(
+            np.asarray(stacked4["w"][i]),
+            np.asarray(consolidated["w"][0]), rtol=1e-6)
+
+    # restore to ONE island (shrink): same weights, no conversion tools
+    _, restored1, _, _ = mgr.restore(params_like=params)
+    np.testing.assert_allclose(np.asarray(restored1["w"]),
+                               np.asarray(consolidated["w"][0]), rtol=1e-6)

@@ -1,0 +1,142 @@
+"""Golden tests for the trip-count-aware HLO cost model (dist/hlo_cost)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import hlo_cost
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_match_unroll():
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def f_unroll(x, w):
+        for i in range(8):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    cs = hlo_cost.analyze(_text(f_scan, x, w))
+    cu = hlo_cost.analyze(_text(f_unroll, x, w))
+    assert cs["diagnostics"] == []
+    assert abs(cs["flops"] - cu["flops"]) / cu["flops"] < 0.02
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, wi):
+                return jnp.tanh(c2 @ wi), None
+            c, _ = jax.lax.scan(inner, c, w)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    c = hlo_cost.analyze(_text(f, x, w))
+    expect = 2 * 128**3 * 8 * 3
+    assert abs(c["flops"] - expect) / expect < 0.02
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    c = hlo_cost.analyze(_text(f, a, b))
+    expect = 2 * 64 * 256 * 32
+    assert abs(c["flops"] - expect) / expect < 0.05
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """Documents WHY hlo_cost exists: XLA counts scan bodies once."""
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 128, 128), jnp.float32)
+    compiled = jax.jit(f_scan).lower(x, w).compile()
+    xla_flops = float(compiled.cost_analysis()["flops"])
+    ours = hlo_cost.analyze(compiled.as_text())["flops"]
+    assert ours > 10 * xla_flops  # 16 trips vs 1
+
+
+def test_dus_counts_window_not_operand():
+    """Scan ys writes (DUS on the stacked array) must charge the update
+    window, not the full aliased operand (the basis of the memory-term
+    fix; EXPERIMENTS.md SSPerf cell 2 it3)."""
+    def f(big, small):
+        return jax.lax.dynamic_update_slice(big, small, (0, 0))
+
+    big = jax.ShapeDtypeStruct((4096, 512), jnp.float32)   # 8 MB
+    small = jax.ShapeDtypeStruct((1, 512), jnp.float32)    # 2 KB
+    mc = hlo_cost.ModuleCost(_text(f, big, small))
+    dus = [(comp, op) for comp in mc.comps.values() for op in comp.ops
+           if op.opcode == "dynamic-update-slice"]
+    assert dus
+    for comp, op in dus:
+        assert mc.op_cost(comp, op).hbm_bytes < 1e5  # window, not 16 MB
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    def loss(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(y * y)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    fwd = hlo_cost.analyze(_text(lambda a, b: loss(a, b), x, w))["flops"]
+    both = hlo_cost.analyze(_text(jax.grad(loss, argnums=1), x, w))["flops"]
+    assert both > 2.2 * fwd  # bwd ~2x fwd matmuls (+ tanh recompute)
+
+
+def test_parser_handles_tuple_types_and_roots():
+    text = """
+HloModule m
+
+%f (p0: f32[8,8]) -> (f32[8,8], s32[]) {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %c = s32[] constant(3)
+  ROOT %t = (f32[8,8]{1,0}, s32[]) tuple(%p0, %c)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  ROOT %dot = f32[8,8]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    got = hlo_cost.analyze(text)
+    assert got["flops"] == 2 * 8 * 8 * 8
+    mc = hlo_cost.ModuleCost(text)
+    root = [op for op in mc.comps["f"].ops if op.is_root][0]
+    assert root.opcode == "tuple"
+    assert [op.const_val for op in mc.comps["f"].ops
+            if op.opcode == "constant"] == [3]
+
+
+def test_collective_bytes_parse():
+    from repro.dist.hlo_analysis import collective_bytes
+    fake = """
+  %ar = f32[1024,16]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[2048]{0} all-gather(%y), dimensions={0}
+  %done = f32[8]{0} all-reduce-done(%s)
+"""
+    got = collective_bytes(fake)
+    assert got["by_op"]["all-reduce"] == 1024 * 16 * 4
+    assert got["by_op"]["all-gather"] == 2048 * 2
+    assert got["count"] == 2  # -done not double-counted

@@ -1,0 +1,67 @@
+"""Optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import pdef, abstract_params
+from repro.optim import (adamw, apply_updates, clip_by_global_norm,
+                         global_norm, opt_state_defs, sgd_momentum)
+from repro.optim.schedules import cosine_warmup, linear_warmup
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_sgd_momentum_first_step():
+    opt = sgd_momentum(0.5, momentum=0.9)
+    params = {"x": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"x": jnp.array([2.0])}
+    upd, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(upd["x"]), [-1.0])  # -lr*g
+    upd2, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(upd2["x"]), [-0.5 * (0.9 * 2 + 2)])
+
+
+def test_params_keep_dtype_through_update():
+    opt = adamw(0.01)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    upd, state = opt.update(g, state, params)
+    new = apply_updates(params, upd)
+    assert new["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(t, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+def test_opt_state_defs_mirror_shapes():
+    pdefs = {"w": pdef((8, 4), ("embed", "ffn")),
+             "b": pdef((4,), (None,))}
+    odefs = opt_state_defs(pdefs)
+    assert odefs["mu"]["w"].shape == (8, 4)
+    assert odefs["mu"]["w"].dtype == jnp.float32
+    assert odefs["nu"]["b"].logical_axes == (None,)
+    abstract_params(odefs)  # must be materialisable
+
+
+def test_schedules():
+    lw = linear_warmup(1.0, 10)
+    assert float(lw(jnp.int32(5))) == 0.5
+    cw = cosine_warmup(1.0, 10, 110, floor=0.1)
+    assert float(cw(jnp.int32(10))) == 1.0
+    assert abs(float(cw(jnp.int32(110))) - 0.1) < 1e-6

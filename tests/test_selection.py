@@ -1,0 +1,109 @@
+"""Unit + property tests for the worker-selection policies (paper SSIII-D)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+from repro.core.cost_model import WorkerStats
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+def stats_of(t_ones, t_tx=0.5, n_data=10):
+    return {i: WorkerStats(wid=i, t_one=t, t_transmit=t_tx, n_data=n_data)
+            for i, t in enumerate(t_ones)}
+
+
+# ---------------- Algorithm 1 ----------------
+
+def test_rminmax_excludes_slow_workers():
+    st_ = sel.RMinRMaxState(rmin=2, rmax=4)
+    s = stats_of([1.0, 1.0, 10.0])  # fastest max-time = 4.5; slow min = 20.5
+    assert sel.rmin_rmax_select(s, st_) == [0, 1]
+
+
+def test_rminmax_includes_all_when_diverged():
+    """The paper's pathology: rmin->1, rmax huge => everyone selected."""
+    st_ = sel.RMinRMaxState(rmin=1, rmax=1000)
+    s = stats_of([1.0, 5.0, 50.0])
+    assert sel.rmin_rmax_select(s, st_) == [0, 1, 2]
+
+
+def test_rminmax_update_direction():
+    st0 = sel.RMinRMaxState(rmin=4, rmax=8, acc_prev=0.2)
+    st1 = sel.rmin_rmax_update(st0, acc_now=0.5)  # accuracy grew
+    assert st1.rmin < st0.rmin and st1.rmax > st0.rmax
+    st2 = sel.rmin_rmax_update(
+        sel.RMinRMaxState(rmin=4, rmax=8, acc_prev=0.5), acc_now=0.3)
+    assert st2.rmin > 4 and st2.rmax <= 8  # accuracy fell: tighten
+
+
+@given(st.lists(st.floats(0.1, 20.0), min_size=2, max_size=10))
+def test_rminmax_always_selects_fastest(t_ones):
+    st_ = sel.RMinRMaxState(rmin=2, rmax=4)
+    s = stats_of(t_ones)
+    chosen = sel.rmin_rmax_select(s, st_)
+    fastest = min(s, key=lambda w: s[w].t_one * st_.rmax + s[w].t_transmit)
+    assert fastest in chosen
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_rminmax_update_keeps_invariants(a0, a1):
+    st_ = sel.RMinRMaxState(rmin=3, rmax=6, acc_prev=a0)
+    new = sel.rmin_rmax_update(st_, a1)
+    assert new.rmin >= 1.0
+    assert new.rmax >= new.rmin
+
+
+# ---------------- Algorithm 2 ----------------
+
+def test_time_based_cold_start_selects_none():
+    st_ = sel.TimeBasedState(T=0.0, r=2)
+    assert sel.time_based_select(stats_of([1.0, 2.0]), st_) == []
+
+
+def test_time_based_selects_within_budget():
+    st_ = sel.TimeBasedState(T=3.0, r=2)
+    s = stats_of([1.0, 1.2, 5.0])  # totals: 2.5, 2.9, 10.5
+    assert sel.time_based_select(s, st_) == [0, 1]
+
+
+def test_time_based_update_admits_cheapest_unselected():
+    s = stats_of([1.0, 2.0, 5.0])
+    st_ = sel.TimeBasedState(T=2.6, r=2, A=0.01, acc_prev=0.50)
+    # stalled accuracy: T grows to the cheapest unselected total (2*2+0.5)
+    new = sel.time_based_update(s, st_, acc_now=0.505)
+    assert np.isclose(new.T, 4.5)
+    assert sel.time_based_select(s, new) == [0, 1]
+
+
+def test_time_based_no_update_when_improving():
+    s = stats_of([1.0, 2.0])
+    st_ = sel.TimeBasedState(T=2.6, r=2, A=0.01, acc_prev=0.3)
+    new = sel.time_based_update(s, st_, acc_now=0.5)
+    assert new.T == 2.6
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=10),
+       st.floats(0.0, 30.0), st.floats(0.0, 30.0))
+def test_time_based_monotone_in_T(t_ones, T1, T2):
+    """Larger budgets can only ADD workers (selection monotonicity)."""
+    s = stats_of(t_ones)
+    lo, hi = sorted([T1, T2])
+    sel_lo = set(sel.time_based_select(s, sel.TimeBasedState(T=lo, r=2)))
+    sel_hi = set(sel.time_based_select(s, sel.TimeBasedState(T=hi, r=2)))
+    assert sel_lo <= sel_hi
+
+
+# ---------------- baselines ----------------
+
+def test_random_selection_deterministic_given_rng():
+    s = stats_of([1, 2, 3, 4, 5])
+    a = sel.select_random(s, 3, np.random.default_rng(7))
+    b = sel.select_random(s, 3, np.random.default_rng(7))
+    assert a == b and len(a) == 3
+
+
+def test_select_fastest():
+    s = stats_of([3.0, 1.0, 2.0])
+    assert sel.select_fastest(s, 2) == [1, 2]

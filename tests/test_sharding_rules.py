@@ -1,0 +1,69 @@
+"""Logical-axis sharding rule resolution (pure metadata, no lowering)."""
+import os
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES,
+                                 logical_to_mesh_spec)
+
+
+def fake_mesh(shape=(2, 4, 8), axes=("pod", "data", "model")):
+    # AbstractMesh carries only names/sizes -- perfect for rule tests
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_divisible_first_match():
+    spec = logical_to_mesh_spec(("embed", "ffn"), (16, 64), fake_mesh())
+    assert spec == P("data", "model")
+
+
+def test_indivisible_falls_back_to_none():
+    spec = logical_to_mesh_spec(("heads",), (6,), fake_mesh())  # 6 % 8 != 0
+    assert spec == P(None)
+
+
+def test_vocab_prefers_model_then_data():
+    mesh = fake_mesh()
+    assert logical_to_mesh_spec(("vocab",), (64,), mesh) == P("model")
+    # 12 divides data(4) but not model(8)
+    assert logical_to_mesh_spec(("vocab",), (12,), mesh) == P("data")
+
+
+def test_stacked_batch_uses_all_fitting_axes():
+    spec = logical_to_mesh_spec(("batch", None), (8, 5), fake_mesh(),
+                                DEFAULT_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_island_rules_batch_excludes_pod():
+    spec = logical_to_mesh_spec(("batch", None), (8, 5), fake_mesh(),
+                                ISLAND_RULES)
+    assert spec == P("data", None)
+
+
+def test_axis_used_once_per_tensor():
+    # both dims want "model": "heads" wins (priority), "ffn" falls back
+    spec = logical_to_mesh_spec(("ffn", "heads"), (64, 64), fake_mesh())
+    assert spec == P(None, "model")
+    # without a priority dim, first position wins
+    spec = logical_to_mesh_spec(("ffn", "expert_ffn"), (64, 64), fake_mesh())
+    assert spec == P("model", None)
+
+
+def test_explicit_mesh_axis_tuple():
+    spec = logical_to_mesh_spec(((("data", "model")), None), (32, 3),
+                                fake_mesh())
+    assert spec == P(("data", "model"), None)
+
+
+def test_island_axis_maps_to_pod():
+    spec = logical_to_mesh_spec(("island", "embed"), (2, 16), fake_mesh())
+    assert spec == P("pod", "data")
+
+
+def test_no_mesh_axis_absent():
+    mesh = fake_mesh((4, 8), ("data", "model"))
+    spec = logical_to_mesh_spec(("island", "embed"), (2, 16), mesh)
+    assert spec == P(None, "data")

@@ -1,0 +1,55 @@
+"""Data warehouse: pointer addressing + one-time credentials (SSIII-B.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.warehouse import CredentialError, DataWarehouse, Pointer
+
+
+def tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+
+
+def test_memory_roundtrip():
+    wh = DataWarehouse()
+    ptr = wh.put(tree())
+    out = wh.get(ptr.uid)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree()["a"]))
+
+
+def test_disk_roundtrip(tmp_path):
+    wh = DataWarehouse(root=tmp_path)
+    ptr = wh.put(tree(), storage="disk")
+    out = wh.get(ptr.uid)
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]), np.ones(4))
+    assert (tmp_path / f"{ptr.uid}.npz").exists()
+
+
+def test_credential_single_use():
+    wh = DataWarehouse()
+    ptr = wh.put(tree())
+    tok = wh.issue_credential(ptr.uid)
+    wh.fetch(tok)
+    with pytest.raises(CredentialError):
+        wh.fetch(tok)  # second use must fail (paper's one-time FTP login)
+
+
+def test_credential_for_missing_uid():
+    wh = DataWarehouse()
+    with pytest.raises(KeyError):
+        wh.issue_credential("nope")
+
+
+def test_delete(tmp_path):
+    wh = DataWarehouse(root=tmp_path)
+    ptr = wh.put(tree(), storage="disk")
+    wh.delete(ptr.uid)
+    assert not wh.exists(ptr.uid)
+    with pytest.raises(KeyError):
+        wh.get(ptr.uid)
+
+
+def test_pointer_identity():
+    p = Pointer("10.0.0.1:9000", "abc")
+    assert p.address == "10.0.0.1:9000" and p.uid == "abc"
