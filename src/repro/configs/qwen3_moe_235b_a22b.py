@@ -18,6 +18,7 @@ SMOKE = ModelConfig(
     num_layers=2, d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
     d_ff=96, vocab_size=499,
     num_experts=8, experts_per_token=4, moe_d_ff=96,
+    capacity_factor=0.0,  # dropless: decode must match teacher forcing
     attention="full",
     norm="rmsnorm", act="silu", remat=False,
 )

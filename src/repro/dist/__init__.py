@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding rules + static HLO cost models.
+
+Submodules (import them directly; nothing heavy happens at package import):
+  sharding     -- logical-axis -> PartitionSpec resolution, constrain(),
+                  rule sets (DEFAULT / ISLAND / SERVE) used by every model
+  hlo_cost     -- trip-count-aware HLO-text cost model (XLA's own
+                  cost_analysis counts scan bodies once; ours multiplies)
+  hlo_analysis -- collective-traffic accounting, XLA cost/memory analysis
+                  extraction, and the Roofline estimator + HW constants
+"""

@@ -1,0 +1,535 @@
+"""Trip-count-aware cost model over post-compile HLO text.
+
+Why not `compiled.cost_analysis()`?  XLA counts every computation ONCE, so a
+scanned program reports the flops of a single trip: an 8-step scan and its
+unrolled twin differ by 8x (see tests/test_hlo_cost.py::
+test_xla_cost_analysis_undercounts_scans).  This module re-derives
+flops/bytes from the HLO text and MULTIPLIES nested while-loop trip counts,
+so scanned and unrolled programs report matching totals.
+
+Structure:
+  ModuleCost(text)   -- parses computations/ops/constants out of the text
+  mc.op_cost(c, op)  -- static cost of one op in its computation context
+  analyze(text)      -- walk the call graph from ENTRY with trip-count
+                        multipliers; returns {flops, hbm_bytes,
+                        collective_bytes, collective_by_op,
+                        transcendentals, diagnostics}
+
+Memory model: ops in fused computations are register-resident (flops only);
+fusion/while boundaries charge HBM.  dynamic-(update-)slice charges the
+WINDOW, not the aliased operand -- scan ys writes must not be billed the
+full stacked array every trip (the memory-term fix; see
+tests/test_hlo_cost.py::test_dus_counts_window_not_operand).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+# ---------------------------------------------------------------------------
+# Shape / type parsing
+# ---------------------------------------------------------------------------
+
+_SPECIAL_BYTES = {"pred": 1, "token": 0, "opaque": 0}
+
+
+def _dtype_bytes(dtype: str) -> float:
+    if dtype in _SPECIAL_BYTES:
+        return _SPECIAL_BYTES[dtype]
+    m = re.search(r"(\d+)", dtype)
+    return int(m.group(1)) / 8 if m else 4
+
+
+def _parse_dims(inner: str) -> list[int]:
+    dims = []
+    for tok in inner.split(","):
+        tok = tok.strip().lstrip("<=")
+        if tok:
+            dims.append(int(tok))
+    return dims
+
+
+def parse_shape(s: str) -> list[tuple[str, list[int]]]:
+    """HLO type string -> flat list of (dtype, dims) array leaves."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return _split_tuple(s[1:i])
+        return []
+    m = re.match(r"(\w+)\[([^\]]*)\]", s)
+    if not m:
+        return []
+    return [(m.group(1), _parse_dims(m.group(2)))]
+
+
+def _split_tuple(inner: str) -> list[tuple[str, list[int]]]:
+    # split on top-level commas only: dims "[128,128]" and layouts "{1,0}"
+    # contain commas too, so track every bracket kind, not just parens
+    leaves, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            leaves.extend(parse_shape(inner[start:i]))
+            start = i + 1
+    leaves.extend(parse_shape(inner[start:]))
+    return leaves
+
+
+def leaf_bytes(leaves) -> float:
+    return sum(_dtype_bytes(dt) * math.prod(dims) for dt, dims in leaves)
+
+
+def leaf_elems(leaves) -> int:
+    return sum(math.prod(dims) for dims in (d for _, d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Instruction / computation parsing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_leaves: list          # [(dtype, dims), ...]
+    operands: list            # operand instruction names (same computation)
+    attrs: str                # raw attribute tail (calls=, backend_config=..)
+    is_root: bool = False
+    const_val: int | float | None = None   # scalar constants only
+    param_idx: int | None = None           # parameter(N)
+
+    @property
+    def out_bytes(self) -> float:
+        return leaf_bytes(self.out_leaves)
+
+    @property
+    def out_elems(self) -> int:
+        return leaf_elems(self.out_leaves)
+
+    def called(self) -> list[str]:
+        """Computation names referenced by this op (calls/body/...)."""
+        names = re.findall(
+            r"(?:calls|to_apply|body|condition|branch_computations)="
+            r"(\{[^}]*\}|%[\w.\-]+)", self.attrs)
+        out = []
+        for n in names:
+            out.extend(re.findall(r"%([\w.\-]+)", n))
+        return out
+
+    def attr_called(self, key: str) -> str | None:
+        m = re.search(rf"{key}=%([\w.\-]+)", self.attrs)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: list = dataclasses.field(default_factory=list)
+    kind: str = "control"     # control | fused | applied
+
+    def __post_init__(self):
+        self.by_name = {}
+
+    def add(self, op: Op):
+        self.ops.append(op)
+        self.by_name[op.name] = op
+
+    @property
+    def root(self) -> Op | None:
+        for op in self.ops:
+            if op.is_root:
+                return op
+        return self.ops[-1] if self.ops else None
+
+
+_COMP_RE = re.compile(
+    r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the ')' matching the '(' at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr(text: str, is_root: bool, name: str) -> Op | None:
+    # text: "<type> <opcode>(<operands>)<attrs>"
+    text = text.strip()
+    if text.startswith("("):
+        end = _balanced(text, 0)
+        type_str, rest = text[:end], text[end:]
+    else:
+        sp = text.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = text[:sp], text[sp:]
+    rest = rest.strip()
+    m = re.match(r"([\w\-]+)", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    paren = rest.find("(", m.end())
+    if paren < 0:
+        span, attrs = "", rest[m.end():]
+    else:
+        end = _balanced(rest, paren)
+        span, attrs = rest[paren + 1:end - 1], rest[end:]
+    operands = re.findall(r"%([\w.\-]+)", span)
+    op = Op(name=name, opcode=opcode, out_leaves=parse_shape(type_str),
+            operands=operands, attrs=attrs, is_root=is_root)
+    if opcode == "constant":
+        lit = span.strip().rstrip("fF")
+        try:
+            op.const_val = int(lit)
+        except ValueError:
+            try:
+                op.const_val = float(lit)
+            except ValueError:
+                op.const_val = None
+    elif opcode == "parameter":
+        try:
+            op.param_idx = int(span.strip())
+        except ValueError:
+            pass
+    return op
+
+
+# ---------------------------------------------------------------------------
+# Cost tables
+# ---------------------------------------------------------------------------
+
+TRANSCENDENTAL = {
+    "tanh", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "sine", "cosine", "tan",
+    "atan2", "erf", "erf-inv",
+}
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "xor", "not", "negate", "abs",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "clamp", "remainder", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "is-finite", "clz", "popcnt", "stochastic-convert",
+} | TRANSCENDENTAL
+# Pure data movement / metadata: no flops, and no HBM charge beyond what
+# their consumers already pay (GTE/tuple/bitcast are free; parameters and
+# constants live wherever their consumers read them).
+ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "reshape", "opt-barrier", "custom-call", "get-dimension-size", "domain",
+    "rng-get-and-update-state",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+
+def normalize_collective(opcode: str) -> str:
+    return opcode[:-6] if opcode.endswith("-start") else opcode
+
+
+def is_collective(opcode: str) -> bool:
+    if opcode.endswith("-done"):
+        return False
+    return normalize_collective(opcode) in COLLECTIVES
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# ModuleCost
+# ---------------------------------------------------------------------------
+
+class ModuleCost:
+    def __init__(self, text: str):
+        self.comps: dict[str, Computation] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._classify()
+
+    # -- parsing ----------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and " = " not in line:
+                    cur = Computation(m.group(2), is_entry=bool(m.group(1)))
+                    self.comps[cur.name] = cur
+                    if cur.is_entry:
+                        self.entry = cur.name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                op = _parse_instr(m.group(3), bool(m.group(1)), m.group(2))
+                if op is not None:
+                    cur.add(op)
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+
+    def _classify(self):
+        for comp in self.comps.values():
+            for op in comp.ops:
+                fused = op.attr_called("calls")
+                if fused and fused in self.comps:
+                    self.comps[fused].kind = "fused"
+                applied = op.attr_called("to_apply")
+                if applied and applied in self.comps:
+                    self.comps[applied].kind = "applied"
+
+    # -- per-op flops -----------------------------------------------------
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        contracted = 1
+        m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.attrs)
+        lhs = comp.by_name.get(op.operands[0]) if op.operands else None
+        if m and lhs is not None and lhs.out_leaves:
+            dims = lhs.out_leaves[0][1]
+            for i in _parse_dims(m.group(1)):
+                if i < len(dims):
+                    contracted *= dims[i]
+        return 2.0 * op.out_elems * contracted
+
+    def _conv_flops(self, comp: Computation, op: Op) -> float:
+        kernel = (comp.by_name.get(op.operands[1])
+                  if len(op.operands) > 1 else None)
+        if kernel is None or not kernel.out_leaves:
+            return 2.0 * op.out_elems
+        kdims = kernel.out_leaves[0][1]
+        kelems = math.prod(kdims)
+        out_ch = 1
+        m = re.search(r"dim_labels=\w+_(\w+)->", op.attrs)
+        if m and "o" in m.group(1):
+            pos = m.group(1).index("o")
+            if pos < len(kdims):
+                out_ch = kdims[pos]
+        else:
+            out_ch = max(kdims) if kdims else 1
+        return 2.0 * op.out_elems * kelems / max(out_ch, 1)
+
+    def op_flops(self, comp: Computation, op: Op) -> tuple[float, float]:
+        """(flops, transcendentals) for one op."""
+        oc = op.opcode
+        if oc == "dot":
+            return self._dot_flops(comp, op), 0.0
+        if oc == "convolution":
+            return self._conv_flops(comp, op), 0.0
+        if oc in TRANSCENDENTAL:
+            n = float(op.out_elems)
+            return n, n
+        if oc in ELEMENTWISE:
+            return float(op.out_elems), 0.0
+        if oc in ("reduce", "reduce-window", "select-and-scatter"):
+            src = comp.by_name.get(op.operands[0]) if op.operands else None
+            return float(src.out_elems if src else op.out_elems), 0.0
+        if oc == "scatter":
+            upd = (comp.by_name.get(op.operands[2])
+                   if len(op.operands) > 2 else None)
+            return float(upd.out_elems if upd else op.out_elems), 0.0
+        return 0.0, 0.0
+
+    # -- per-op memory ----------------------------------------------------
+    def _operand_bytes(self, comp: Computation, op: Op) -> list[float]:
+        out = []
+        for name in op.operands:
+            src = comp.by_name.get(name)
+            out.append(src.out_bytes if src is not None else 0.0)
+        return out
+
+    def _trace_to_param(self, comp: Computation, name: str) -> int | None:
+        seen = set()
+        while name in comp.by_name and name not in seen:
+            seen.add(name)
+            op = comp.by_name[name]
+            if op.opcode == "parameter":
+                return op.param_idx
+            if op.opcode in ("bitcast", "copy", "reshape",
+                             "get-tuple-element", "transpose"):
+                if not op.operands:
+                    return None
+                name = op.operands[0]
+                continue
+            return None
+        return None
+
+    def _fusion_hbm(self, comp: Computation, op: Op) -> float:
+        fused_name = op.attr_called("calls")
+        fused = self.comps.get(fused_name)
+        operand_bytes = self._operand_bytes(comp, op)
+        out_bytes = op.out_bytes
+        if fused is None or fused.root is None:
+            return sum(operand_bytes) + out_bytes
+        root = fused.root
+        dus_roots = []
+        if root.opcode == "dynamic-update-slice":
+            dus_roots = [root]
+        elif root.opcode == "tuple":
+            dus_roots = [fused.by_name[n] for n in root.operands
+                         if n in fused.by_name
+                         and fused.by_name[n].opcode == "dynamic-update-slice"]
+        skip = set()
+        for dus in dus_roots:
+            if len(dus.operands) < 2:
+                continue
+            upd = fused.by_name.get(dus.operands[1])
+            upd_bytes = upd.out_bytes if upd else 0.0
+            # write the window, not the whole aliased buffer
+            out_bytes = max(out_bytes - dus.out_bytes, 0.0) + upd_bytes
+            pidx = self._trace_to_param(fused, dus.operands[0])
+            if pidx is not None and pidx < len(operand_bytes):
+                skip.add(pidx)
+        reads = sum(b for i, b in enumerate(operand_bytes) if i not in skip)
+        return reads + out_bytes
+
+    def op_hbm(self, comp: Computation, op: Op) -> float:
+        if comp.kind != "control":
+            return 0.0        # fused / applied: register-resident
+        oc = op.opcode
+        if oc in ZERO_COST or oc in ("while", "call", "conditional"):
+            return 0.0        # control flow is charged inside callees
+        if oc == "fusion":
+            return self._fusion_hbm(comp, op)
+        if oc in ("dynamic-slice", "slice"):
+            return 2.0 * op.out_bytes
+        if oc == "dynamic-update-slice":
+            upd = (comp.by_name.get(op.operands[1])
+                   if len(op.operands) > 1 else None)
+            return 2.0 * (upd.out_bytes if upd else op.out_bytes)
+        if oc == "gather":
+            idx = (comp.by_name.get(op.operands[1])
+                   if len(op.operands) > 1 else None)
+            return 2.0 * op.out_bytes + (idx.out_bytes if idx else 0.0)
+        if oc in ("broadcast",):
+            return op.out_bytes + sum(self._operand_bytes(comp, op))
+        return sum(self._operand_bytes(comp, op)) + op.out_bytes
+
+    # -- combined ---------------------------------------------------------
+    def op_cost(self, comp: Computation, op: Op) -> OpCost:
+        flops, trans = self.op_flops(comp, op)
+        hbm = self.op_hbm(comp, op)
+        coll = 0.0
+        if is_collective(op.opcode):
+            coll = max(op.out_bytes,
+                       sum(self._operand_bytes(comp, op)))
+        return OpCost(flops=flops, hbm_bytes=hbm, transcendentals=trans,
+                      collective_bytes=coll)
+
+    # -- trip counts ------------------------------------------------------
+    def trip_count(self, op: Op) -> int | None:
+        m = re.search(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)',
+                      op.attrs)
+        if m:
+            return int(m.group(1))
+        cond_name = op.attr_called("condition")
+        cond = self.comps.get(cond_name)
+        if cond is None or cond.root is None:
+            return None
+        root = cond.root
+        if root.opcode != "compare":
+            return None
+        dm = re.search(r"direction=(\w+)", root.attrs)
+        direction = dm.group(1) if dm else "LT"
+        for name in root.operands:
+            src = cond.by_name.get(name)
+            if src is not None and src.opcode == "constant" \
+                    and isinstance(src.const_val, int):
+                # jax scans count 0..N-1 step 1
+                return src.const_val + (1 if direction == "LE" else 0)
+        return None
+
+    # -- whole-module walk ------------------------------------------------
+    def analyze(self) -> dict:
+        totals = OpCost()
+        by_op: dict[str, float] = defaultdict(float)
+        diags: list[str] = []
+
+        def walk(comp_name: str, mult: float, stack: tuple):
+            comp = self.comps.get(comp_name)
+            if comp is None:
+                diags.append(f"missing computation %{comp_name}")
+                return
+            if comp_name in stack:
+                diags.append(f"recursive call into %{comp_name}; skipped")
+                return
+            stack = stack + (comp_name,)
+            for op in comp.ops:
+                c = self.op_cost(comp, op)
+                totals.flops += c.flops * mult
+                totals.hbm_bytes += c.hbm_bytes * mult
+                totals.transcendentals += c.transcendentals * mult
+                if c.collective_bytes:
+                    totals.collective_bytes += c.collective_bytes * mult
+                    by_op[normalize_collective(op.opcode)] += \
+                        c.collective_bytes * mult
+                oc = op.opcode
+                if oc == "while":
+                    trips = self.trip_count(op)
+                    if trips is None:
+                        diags.append(
+                            f"unknown trip count for %{op.name}; assuming 1")
+                        trips = 1
+                    body = op.attr_called("body")
+                    cond = op.attr_called("condition")
+                    if body:
+                        walk(body, mult * trips, stack)
+                    if cond:
+                        walk(cond, mult * (trips + 1), stack)
+                elif oc == "fusion":
+                    callee = op.attr_called("calls")
+                    if callee:
+                        walk(callee, mult, stack)
+                elif oc == "call":
+                    callee = op.attr_called("to_apply")
+                    if callee:
+                        walk(callee, mult, stack)
+                elif oc == "conditional":
+                    for callee in op.called():
+                        walk(callee, mult, stack)
+                # to_apply of reduce/map/scatter is approximated at the op
+                # level (1 flop per application) -- not walked.
+
+        if self.entry is not None:
+            walk(self.entry, 1.0, ())
+        return {
+            "flops": totals.flops,
+            "hbm_bytes": totals.hbm_bytes,
+            "collective_bytes": totals.collective_bytes,
+            "collective_by_op": dict(by_op),
+            "transcendentals": totals.transcendentals,
+            "diagnostics": diags,
+        }
+
+
+def analyze(text: str) -> dict:
+    """Parse `text` and return trip-count-multiplied module totals."""
+    return ModuleCost(text).analyze()

@@ -1,0 +1,237 @@
+"""Logical-axis -> mesh-axis sharding resolution.
+
+Models annotate tensors with LOGICAL axis names ("batch", "embed", "ffn",
+"heads", ...).  A RuleSet maps each logical name to an ordered list of
+candidate mesh axes; `logical_to_mesh_spec` resolves one tensor's logical
+axes against a mesh, enforcing:
+
+  * divisibility  -- a mesh axis is only used when the dim size divides
+                     evenly; otherwise the next candidate (or None) is used;
+  * axis-used-once -- each mesh axis appears at most once per tensor;
+                     priority dims (heads/kv_heads) claim first, then
+                     position order breaks ties;
+  * explicit axes -- a logical entry may itself be a tuple of MESH axis
+                     names (e.g. ("model",) for sequence/context
+                     parallelism), resolved verbatim before any rule.
+
+Three rule sets ship here:
+  DEFAULT_RULES -- FSDP ("data") x TP ("model") training layout; batch
+                   stacks over every pod+data axis that fits.
+  ISLAND_RULES  -- the FL layout: the `pod` axis is reserved for the
+                   island ("island" -> pod) so batch shards over data only.
+  SERVE_RULES   -- stationary TP-only weights (no FSDP): "embed" stays
+                   replicated, everything tensor-parallel goes to "model".
+
+`constrain(x, logical_axes)` applies `with_sharding_constraint` against the
+AMBIENT mesh (the `with mesh:` context the caller lowered under) and the
+ambient rules (`use_rules`).  With no ambient mesh it is a no-op, so model
+code runs unchanged in single-device CPU tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+class RuleSet(dict):
+    """logical axis name -> ordered tuple of candidates.
+
+    A candidate is either a mesh axis name (str) or a tuple of mesh axis
+    names to be stacked greedily (longest divisible prefix wins).
+    `priority` lists logical dims that claim their mesh axes before the
+    rest of the tensor (attention heads beat ffn for the "model" axis).
+    """
+
+    def __init__(self, mapping=(), priority=("heads", "kv_heads"), **kw):
+        super().__init__(mapping, **kw)
+        self.priority = tuple(priority)
+
+    def replacing(self, **kw) -> "RuleSet":
+        new = RuleSet(self, priority=self.priority)
+        new.update(kw)
+        return new
+
+
+DEFAULT_RULES = RuleSet({
+    "batch": (("pod", "data"),),
+    "island": ("pod",),
+    "layers": (),                    # scan axis: never sharded
+    "embed": ("data",),              # FSDP shard of the d_model dim
+    "embed_tp": ("model", "data"),   # output-projection d_model dim
+    "ffn": ("model",),
+    "expert_ffn": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model", "data"),
+    "ssm_inner": ("model",),
+    "lru_width": ("model",),
+})
+
+# FL islands: `pod` belongs to the island axis, batch must not touch it.
+ISLAND_RULES = DEFAULT_RULES.replacing(batch=("data",))
+
+# Serving: stationary weights, tensor-parallel only (no FSDP over "data").
+SERVE_RULES = DEFAULT_RULES.replacing(
+    embed=(), embed_tp=("model",), vocab=("model",))
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def _mesh_sizes(mesh) -> dict:
+    return {str(k): int(v) for k, v in dict(mesh.shape).items()}
+
+
+def logical_to_mesh_spec(logical_axes, shape, mesh,
+                         rules: RuleSet | None = None) -> PartitionSpec:
+    """Resolve one tensor's logical axes to a PartitionSpec for `mesh`.
+
+    logical_axes: per-dim entries -- a logical name, None, or an explicit
+        tuple of mesh axis names.  Must match len(shape).
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    if len(logical_axes) != len(shape):
+        raise ValueError(f"rank mismatch: axes {logical_axes} vs "
+                         f"shape {shape}")
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries: list = [None] * len(shape)
+
+    def claim_stack(names, dim):
+        """Longest prefix of `names` (present, unused) whose cumulative
+        product divides `dim`."""
+        picked, prod = [], 1
+        for nm in names:
+            if nm not in sizes or nm in used:
+                continue
+            if dim % (prod * sizes[nm]) == 0:
+                picked.append(nm)
+                prod *= sizes[nm]
+            else:
+                break
+        return picked
+
+    def emit(picked):
+        for nm in picked:
+            used.add(nm)
+        if not picked:
+            return None
+        return picked[0] if len(picked) == 1 else tuple(picked)
+
+    def resolve_rule(name, dim):
+        for cand in rules.get(name, ()):
+            if isinstance(cand, (tuple, list)):
+                picked = claim_stack(cand, dim)
+                if picked:
+                    return emit(picked)
+            elif cand in sizes and cand not in used and dim % sizes[cand] == 0:
+                return emit([cand])
+        return None
+
+    # Pass 0: explicit mesh-axis tuples bind first (caller knows best).
+    for i, ax in enumerate(logical_axes):
+        if isinstance(ax, (tuple, list)):
+            entries[i] = emit(claim_stack(ax, shape[i]))
+    # Pass 1: priority logical dims; Pass 2: everything else, in position
+    # order.
+    for wave in (rules.priority, None):
+        for i, ax in enumerate(logical_axes):
+            if not isinstance(ax, str) or entries[i] is not None:
+                continue
+            if wave is not None and ax not in wave:
+                continue
+            if wave is None and ax in rules.priority:
+                continue
+            entries[i] = resolve_rule(ax, shape[i])
+    return PartitionSpec(*entries)
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of `name` in the ambient mesh (1 when absent / no mesh)."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return 1
+    return _mesh_sizes(mesh).get(name, 1)
+
+
+def spec_tree_for(defs, mesh, rules: RuleSet | None = None):
+    """ParamDef tree -> NamedSharding tree (jit in_shardings)."""
+    def leaf(d):
+        spec = logical_to_mesh_spec(d.logical_axes, d.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(leaf, defs,
+                        is_leaf=lambda x: hasattr(x, "logical_axes"))
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh + rules (for constrain() inside model code)
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def current_rules() -> RuleSet:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(rules: RuleSet):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def _ambient_mesh():
+    """The mesh of the enclosing `with mesh:` / `use_mesh` context."""
+    try:                                    # classic thread-resources mesh
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:                                    # newer explicit-mesh API
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint against the ambient mesh + rules.
+
+    No-op when there is no ambient mesh (CPU unit tests, eager code).
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_mesh_spec(logical_axes, x.shape, mesh, current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Version compat
+# ---------------------------------------------------------------------------
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across jax versions: (sizes, names) vs ((name, size),)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))

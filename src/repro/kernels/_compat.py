@@ -1,0 +1,6 @@
+"""Pallas API compat shared by all kernels in this package."""
+from jax.experimental.pallas import tpu as pltpu
+
+# TPUCompilerParams was renamed to CompilerParams in newer jax releases
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -12,20 +12,29 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types across jax versions (axis_types=
+    only exists on newer jax, where Auto is the default anyway)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(at.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this process actually has (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, n), ("data", "model"))
 
 
 def n_islands(mesh) -> int:

@@ -481,6 +481,12 @@ def moe_defs(cfg):
 
 
 def moe_capacity(cfg, tokens: int) -> int:
+    # capacity_factor <= 0 means DROPLESS: an expert can receive at most one
+    # choice per token, so capacity == tokens guarantees no token ever
+    # overflows (smoke configs use this -- an untrained router is imbalanced
+    # enough to overflow any reasonable factor at test scale).
+    if cfg.capacity_factor <= 0:
+        return tokens
     c = int(math.ceil(tokens * cfg.experts_per_token / cfg.num_experts
                       * cfg.capacity_factor))
     return max(8, -(-c // 8) * 8)  # round up to 8

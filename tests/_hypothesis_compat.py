@@ -1,0 +1,131 @@
+"""Deterministic fallback for `hypothesis` property tests.
+
+When the real `hypothesis` package is available (see requirements-dev.txt)
+the test modules use it; this shim only loads as an ImportError fallback so
+the suite still collects and runs in minimal environments.
+
+It is NOT a property-based tester: it draws a fixed, seeded sequence of
+examples per test (boundary values first, then uniform random) -- enough to
+exercise the same assertions deterministically, with no shrinking.
+Only the strategy surface the repo's tests use is implemented:
+floats / integers / lists / sampled_from, plus given() and the
+settings profile API.
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng, i):
+        """i=0 -> lower boundary, i=1 -> upper boundary, else random."""
+        return self._draw(rng, i)
+
+
+def _floats(min_value=0.0, max_value=1.0, **_):
+    def draw(rng, i):
+        if i == 0:
+            return float(min_value)
+        if i == 1:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+    return _Strategy(draw)
+
+
+def _integers(min_value, max_value, **_):
+    def draw(rng, i):
+        if i == 0:
+            return int(min_value)
+        if i == 1:
+            return int(max_value)
+        return int(rng.integers(min_value, max_value + 1))
+    return _Strategy(draw)
+
+
+def _sampled_from(options):
+    opts = list(options)
+
+    def draw(rng, i):
+        if i < len(opts):
+            return opts[i]
+        return opts[int(rng.integers(len(opts)))]
+    return _Strategy(draw)
+
+
+def _lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng, i):
+        if i == 0:
+            n = min_size
+        elif i == 1:
+            n = max_size
+        else:
+            n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng, 2) for _ in range(n)]
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    floats=_floats, integers=_integers, lists=_lists,
+    sampled_from=_sampled_from)
+
+
+class settings:
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+    def __call__(self, fn):          # @settings(...) decorator form
+        fn._hc_settings = self.kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = {**cls._current, **cls._profiles.get(name, {})}
+
+
+def given(*strats, **kw_strats):
+    if kw_strats:
+        raise NotImplementedError(
+            "keyword strategies are not supported by the fallback shim")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = max(int(settings._current.get("max_examples", 25)), 2)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                try:
+                    fn(*args, *(s.example(rng, i) for s in strats), **kwargs)
+                except _Unsatisfied:
+                    continue
+        # pytest resolves fixtures through __wrapped__; without this it
+        # would treat the strategy parameters as missing fixtures.
+        del runner.__wrapped__
+        return runner
+    return deco
+
+
+def assume(condition) -> bool:
+    """Best-effort: the shim cannot retry a draw, so assume() only skips the
+    remainder of an example by raising when the condition fails."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass

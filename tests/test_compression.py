@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import compression as comp
 

@@ -1,6 +1,10 @@
 """Tests for the Eq. 4 cost model."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import cost_model as cm
 

@@ -1,0 +1,214 @@
+"""Extra dist-layer coverage: randomized sharding-rule properties + HLO
+cost-model goldens on hand-written fixtures (no compilation needed)."""
+import numpy as np
+
+from repro.dist import hlo_cost
+from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES, SERVE_RULES,
+                                 abstract_mesh, logical_to_mesh_spec)
+
+# ---------------------------------------------------------------------------
+# Property: specs are always valid for random meshes / shapes / axes
+# ---------------------------------------------------------------------------
+
+LOGICAL = [None, "batch", "island", "embed", "embed_tp", "ffn", "expert_ffn",
+           "heads", "kv_heads", "vocab", "experts", "ssm_inner", "lru_width",
+           "layers", "unknown_axis"]
+MESH_AXES = ["pod", "data", "model"]
+
+
+def _spec_mesh_axes(spec):
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, tuple):
+            out.extend(entry)
+        else:
+            out.append(entry)
+    return out
+
+
+def test_random_meshes_spec_always_valid():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n_axes = int(rng.integers(1, 4))
+        names = list(rng.choice(MESH_AXES, size=n_axes, replace=False))
+        sizes = [int(rng.choice([1, 2, 3, 4, 8])) for _ in names]
+        mesh = abstract_mesh(sizes, names)
+        size_of = dict(zip(names, sizes))
+
+        rank = int(rng.integers(1, 5))
+        axes = tuple(rng.choice(LOGICAL, size=rank))
+        axes = tuple(None if a == "None" else a for a in axes)
+        shape = tuple(int(rng.choice([1, 2, 3, 6, 8, 16, 24, 64]))
+                      for _ in range(rank))
+        rules = [DEFAULT_RULES, ISLAND_RULES, SERVE_RULES][
+            int(rng.integers(3))]
+        spec = logical_to_mesh_spec(axes, shape, mesh, rules)
+
+        used = _spec_mesh_axes(spec)
+        # each mesh axis appears at most once across the whole spec
+        assert len(used) == len(set(used)), (axes, shape, names, spec)
+        # every used axis exists in the mesh
+        assert all(u in size_of for u in used), (spec, names)
+        # divisibility: the product of assigned axes divides the dim
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                continue
+            group = entry if isinstance(entry, tuple) else (entry,)
+            prod = int(np.prod([size_of[a] for a in group]))
+            assert dim % prod == 0, (axes, shape, names, spec)
+
+
+def test_island_rules_never_put_batch_on_pod():
+    rng = np.random.default_rng(1)
+    mesh = abstract_mesh((2, 4, 8), ("pod", "data", "model"))
+    for _ in range(50):
+        b = int(rng.choice([2, 4, 8, 16, 64]))
+        spec = logical_to_mesh_spec(("batch", None), (b, 5), mesh,
+                                    ISLAND_RULES)
+        assert "pod" not in _spec_mesh_axes(spec)
+
+
+def test_serve_rules_keep_embed_replicated():
+    mesh = abstract_mesh((4, 8), ("data", "model"))
+    spec = logical_to_mesh_spec(("embed", "ffn"), (16, 64), mesh, SERVE_RULES)
+    assert spec[0] is None and spec[1] == "model"
+
+
+# ---------------------------------------------------------------------------
+# HLO goldens (hand-written text: while loops, fusions, tuple roots)
+# ---------------------------------------------------------------------------
+
+def _while_module(attr: str, bound: str = "%n") -> str:
+    return """
+HloModule m
+
+%body (p: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {
+  %p = (s32[], f32[16,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[16,16]{1,0}) %p), index=0
+  %x = f32[16,16]{1,0} get-tuple-element((s32[], f32[16,16]{1,0}) %p), index=1
+  %d = f32[16,16]{1,0} dot(f32[16,16]{1,0} %x, f32[16,16]{1,0} %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  ROOT %t = (s32[], f32[16,16]{1,0}) tuple(%ip, %d)
+}
+
+%cond (q: (s32[], f32[16,16])) -> pred[] {
+  %q = (s32[], f32[16,16]{1,0}) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[16,16]{1,0}) %q), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %j, BOUND), direction=LT
+}
+
+ENTRY %main (a: f32[16,16]) -> (s32[], f32[16,16]) {
+  %a = f32[16,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[16,16]{1,0}) tuple(%z, %a)
+  ROOT %w = (s32[], f32[16,16]{1,0}) while((s32[], f32[16,16]{1,0}) %t0), condition=%cond, body=%body ATTR
+}
+""".replace("ATTR", attr).replace("BOUND", f"s32[] {bound}")
+
+
+def test_while_known_trip_count_multiplies():
+    text = _while_module(
+        ', backend_config={"known_trip_count":{"n":"5"}}')
+    got = hlo_cost.analyze(text)
+    assert got["diagnostics"] == []
+    expect = 5 * 2 * 16 ** 3
+    assert abs(got["flops"] - expect) / expect < 0.01
+
+
+def test_while_trip_count_from_condition_constant():
+    got = hlo_cost.analyze(_while_module(""))
+    assert got["diagnostics"] == []
+    expect = 5 * 2 * 16 ** 3
+    assert abs(got["flops"] - expect) / expect < 0.01
+
+
+def test_while_unknown_trip_count_diagnosed():
+    # condition compares two loop-carried values: trip count is unknowable
+    got = hlo_cost.analyze(_while_module("", bound="%j"))
+    assert any("trip count" in d for d in got["diagnostics"])
+    expect = 2 * 16 ** 3          # assumed 1 trip
+    assert abs(got["flops"] - expect) / expect < 0.01
+
+
+def test_fusion_dus_root_charges_window():
+    text = """
+HloModule m
+
+%fused (fp0: f32[4096,512], fp1: f32[1,512], fp2: s32[]) -> f32[4096,512] {
+  %fp0 = f32[4096,512]{1,0} parameter(0)
+  %fp1 = f32[1,512]{1,0} parameter(1)
+  %fp2 = s32[] parameter(2)
+  ROOT %dus = f32[4096,512]{1,0} dynamic-update-slice(f32[4096,512]{1,0} %fp0, f32[1,512]{1,0} %fp1, s32[] %fp2, s32[] %fp2)
+}
+
+ENTRY %main (big: f32[4096,512], small: f32[1,512], i: s32[]) -> f32[4096,512] {
+  %big = f32[4096,512]{1,0} parameter(0)
+  %small = f32[1,512]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %fu = f32[4096,512]{1,0} fusion(f32[4096,512]{1,0} %big, f32[1,512]{1,0} %small, s32[] %i), kind=kLoop, calls=%fused
+}
+"""
+    got = hlo_cost.analyze(text)
+    # window (2 KB) x2 + indices, NOT the 16 MB aliased big buffer
+    assert got["hbm_bytes"] < 1e4, got["hbm_bytes"]
+
+
+def test_tuple_root_entry_and_collectives_scale_with_trips():
+    text = """
+HloModule m
+
+%body (p: (s32[], f32[1024])) -> (s32[], f32[1024]) {
+  %p = (s32[], f32[1024]{0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[1024]{0}) %p), index=0
+  %x = f32[1024]{0} get-tuple-element((s32[], f32[1024]{0}) %p), index=1
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={}
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  ROOT %t = (s32[], f32[1024]{0}) tuple(%ip, %ar)
+}
+
+%cond (q: (s32[], f32[1024])) -> pred[] {
+  %q = (s32[], f32[1024]{0}) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[1024]{0}) %q), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %j, s32[] %n), direction=LT
+}
+
+ENTRY %main (a: f32[1024]) -> (s32[], f32[1024]) {
+  %a = f32[1024]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[1024]{0}) tuple(%z, %a)
+  %w = (s32[], f32[1024]{0}) while((s32[], f32[1024]{0}) %t0), condition=%cond, body=%body
+  %r = f32[1024]{0} get-tuple-element((s32[], f32[1024]{0}) %w), index=1
+  ROOT %out = (f32[1024]{0}, s32[]) tuple(%r, %z)
+}
+"""
+    got = hlo_cost.analyze(text)
+    # 3 trips x 4 KB all-reduce, attributed to the base opcode
+    assert got["collective_bytes"] == 3 * 1024 * 4
+    assert got["collective_by_op"] == {"all-reduce": 3 * 1024 * 4}
+    mc = hlo_cost.ModuleCost(text)
+    root = mc.comps["main"].root
+    assert root.opcode == "tuple" and root.is_root
+
+
+def test_tuple_types_with_multidim_leaves_and_layouts():
+    """Commas inside dims [128,128] / layouts {1,0} must not split the
+    tuple (regression: paren-only depth tracking zero-costed async
+    collectives and fusion tuple roots)."""
+    got = hlo_cost.parse_shape("(f32[128,128]{1,0}, bf16[64,2,2], s32[])")
+    assert got == [("f32", [128, 128]), ("bf16", [64, 2, 2]), ("s32", [])]
+    assert hlo_cost.leaf_bytes(got) == 128 * 128 * 4 + 64 * 2 * 2 * 2 + 4
+
+    from repro.dist.hlo_analysis import collective_bytes
+    fake = ("  %ar = (f32[128,128]{1,0}, f32[128,128]{1,0}) "
+            "all-reduce-start(f32[128,128]{1,0} %x), replica_groups={}\n"
+            "  %d = f32[128,128]{1,0} all-reduce-done((f32[128,128]{1,0}, "
+            "f32[128,128]{1,0}) %ar)\n")
+    got = collective_bytes(fake)
+    assert got["count"] == 1
+    assert got["by_op"]["all-reduce"] == 2 * 128 * 128 * 4

@@ -1,6 +1,10 @@
 """Unit + property tests for the worker-selection policies (paper SSIII-D)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import selection as sel
 from repro.core.cost_model import WorkerStats

@@ -1,0 +1,85 @@
+"""Regression tests for the selection update rules (paper SSIII-D).
+
+Guards two documented pathologies:
+  * rmin/rmax divergence -- the update must keep 1 <= rmin <= rmax under
+    ANY accuracy sequence (the paper's Eq. 1/2 as printed diverge; see
+    selection.py's module docstring and benchmarks/fig15-16);
+  * the time-based oscillation bug -- T must be MONOTONE non-decreasing
+    even when measured worker times drift upward between rounds (without
+    the max() in time_based_update the pool oscillates at 3-4 workers).
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.cost_model import WorkerStats
+
+
+def _stats(t_ones, t_tx=0.5):
+    return {i: WorkerStats(wid=i, t_one=float(t), t_transmit=t_tx, n_data=10)
+            for i, t in enumerate(t_ones)}
+
+
+def _adversarial_accuracy_sequences():
+    rng = np.random.default_rng(42)
+    yield [0.0, 1.0] * 25                      # hard oscillation
+    yield [1.0, 0.0] * 25
+    yield list(np.linspace(0.0, 1.0, 50))      # steady growth
+    yield list(np.linspace(1.0, 0.0, 50))      # steady collapse
+    yield [0.5] * 50                           # stall
+    yield list(rng.uniform(0.0, 1.0, 200))     # noise
+    yield [0.0] * 10 + [1.0] * 10 + [0.0] * 10
+
+
+def test_rmin_rmax_update_invariants_under_adversarial_sequences():
+    for seq in _adversarial_accuracy_sequences():
+        state = sel.RMinRMaxState(rmin=3.0, rmax=6.0)
+        for acc in seq:
+            state = sel.rmin_rmax_update(state, acc)
+            assert state.rmin >= 1.0, (seq[:5], state)
+            assert state.rmax >= state.rmin, (seq[:5], state)
+
+
+def test_rmin_rmax_update_survives_extreme_starts():
+    for rmin, rmax in [(1.0, 1.0), (1.0, 1e6), (50.0, 50.0)]:
+        state = sel.RMinRMaxState(rmin=rmin, rmax=rmax)
+        for acc in [0.0, 1.0, 0.0, 1.0, 0.5]:
+            state = sel.rmin_rmax_update(state, acc)
+            assert 1.0 <= state.rmin <= state.rmax
+
+
+def test_time_based_T_monotone_under_drifting_measurements():
+    rng = np.random.default_rng(7)
+    stats = _stats([1.0, 2.0, 5.0, 9.0])
+    state = sel.TimeBasedState(T=0.0, r=2, A=0.01)
+    prev_T = state.T
+    for step in range(100):
+        # measured times drift: slow workers get slower, fast ones jitter
+        for w, s in stats.items():
+            s.t_one = max(0.05, s.t_one * float(rng.uniform(0.9, 1.2)))
+        acc = float(rng.uniform(0.0, 0.01))    # mostly stalled accuracy
+        state = sel.time_based_update(stats, state, acc)
+        assert state.T >= prev_T, (step, prev_T, state.T)
+        prev_T = state.T
+
+
+def test_time_based_T_monotone_even_when_accuracy_improves():
+    stats = _stats([1.0, 2.0])
+    state = sel.TimeBasedState(T=3.0, r=2, A=0.005, acc_prev=0.1)
+    for acc in [0.2, 0.3, 0.31, 0.311, 0.9]:
+        new = sel.time_based_update(stats, state, acc)
+        assert new.T >= state.T
+        state = new
+
+
+def test_time_based_admission_grows_pool_not_shrinks():
+    """Once a worker fits in T it keeps fitting (fixed measurements)."""
+    stats = _stats([1.0, 2.0, 4.0, 8.0])
+    state = sel.TimeBasedState(T=0.0, r=2, A=1.0)  # always "stalled"
+    sizes = []
+    for _ in range(10):
+        state = sel.time_based_update(stats, state, acc_now=0.0)
+        sizes.append(len(sel.time_based_select(stats, state)))
+    assert sizes == sorted(sizes)
+    assert sizes[-1] == len(stats)

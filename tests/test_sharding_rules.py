@@ -5,13 +5,14 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES,
+from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES, abstract_mesh,
                                  logical_to_mesh_spec)
 
 
 def fake_mesh(shape=(2, 4, 8), axes=("pod", "data", "model")):
     # AbstractMesh carries only names/sizes -- perfect for rule tests
-    return jax.sharding.AbstractMesh(shape, axes)
+    # (abstract_mesh papers over the ctor signature change across jax vers)
+    return abstract_mesh(shape, axes)
 
 
 def test_divisible_first_match():
