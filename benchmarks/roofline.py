@@ -75,9 +75,15 @@ def cell_row(rec: dict, entry_name: str | None = None) -> dict | None:
     n_chips = chips(rec)
     useful = mf / n_chips / max(hc["flops"], 1e-9)
     mem = e.get("memory_analysis", {})
+    ld = rec.get("layout_decision") or {}
     return {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         "status": "ok", "entry": entry_name,
+        "layout": ld.get("layout", ""),
+        "layout_fits": ld.get("fits"),
+        "layout_headroom_gb": ld.get("headroom_gb"),
+        "layout_reason": ld.get("reason", ""),
+        "layout_candidates": ld.get("candidates", []),
         "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
         "dominant": dom, "bound_s": max(t_c, t_m, t_x),
         "model_flops": mf, "useful_ratio": useful,
@@ -91,19 +97,24 @@ def cell_row(rec: dict, entry_name: str | None = None) -> dict | None:
 
 def markdown_table(rows) -> str:
     hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
-           "| useful FLOPs | roofline frac | mem GB/dev |\n"
-           "|---|---|---|---|---|---|---|---|---|\n")
+           "| useful FLOPs | roofline frac | mem GB/dev | layout |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
     out = [hdr]
     for r in rows:
         if r["status"] != "ok":
             out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
-                       f"{r['status']}: {r.get('reason','')} | -- | -- | -- |\n")
+                       f"{r['status']}: {r.get('reason','')} | -- | -- | -- "
+                       f"| -- |\n")
             continue
+        layout = r.get("layout") or "--"
+        if layout != "--" and r.get("layout_fits") is False:
+            layout += " (!fit)"
         out.append(
             f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
             f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
             f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
-            f"{r['roofline_fraction']:.3f} | {r['hbm_gb_per_dev']:.1f} |\n")
+            f"{r['roofline_fraction']:.3f} | {r['hbm_gb_per_dev']:.1f} | "
+            f"{layout} |\n")
     return "".join(out)
 
 

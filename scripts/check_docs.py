@@ -1,0 +1,74 @@
+"""Docs lint: relative links must resolve, dist modules must be documented.
+
+Checks (both are cheap, pure-stdlib, run in CI's docs job and in
+tests/test_docs.py):
+
+  1. every relative markdown link in README.md / EXPERIMENTS.md /
+     ROADMAP.md points at a file or directory that exists (http(s) links
+     and #anchors within the same file are skipped);
+  2. every python module under src/repro/dist/ has a module docstring.
+
+Exit code 0 when clean, 1 with one line per violation otherwise.
+
+  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ("README.md", "EXPERIMENTS.md", "ROADMAP.md")
+DOCSTRING_ROOTS = ("src/repro/dist",)
+
+# [text](target) -- but not images' inner () and not footnote refs
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(doc: Path) -> list[str]:
+    problems = []
+    text = doc.read_text()
+    # strip fenced code blocks: links in shell examples are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:          # pure #anchor into the same file
+            continue
+        if not (doc.parent / path).exists():
+            problems.append(f"{doc.name}: broken relative link -> {target}")
+    return problems
+
+
+def check_docstrings(root: Path) -> list[str]:
+    problems = []
+    for py in sorted(root.rglob("*.py")):
+        tree = ast.parse(py.read_text())
+        if ast.get_docstring(tree) is None:
+            problems.append(
+                f"{py.relative_to(ROOT)}: missing module docstring")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for name in DOCS:
+        doc = ROOT / name
+        if doc.exists():
+            problems += check_links(doc)
+        else:
+            problems.append(f"{name}: file missing")
+    for rel in DOCSTRING_ROOTS:
+        problems += check_docstrings(ROOT / rel)
+    for p in problems:
+        print(p)
+    print(f"[check_docs] {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

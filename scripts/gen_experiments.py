@@ -1,47 +1,98 @@
-"""Generate EXPERIMENTS.md from dry-run artifacts + benchmark logs."""
-import json
+"""Generate EXPERIMENTS.md from the committed dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (the `python -m repro.launch.dryrun --all
+--mesh both` sweep) and emits:
+  * sweep health summary (compiled / skipped / errored, compile times);
+  * per-cell roofline tables (single + multi mesh) with the layout column;
+  * the layout-policy decision table: chosen layout, peak HBM, headroom
+    and the per-candidate scoring that drove each serve-cell choice;
+  * FL weight-exchange (fl_aggregate) traffic table on the multi mesh;
+  * hbm_bytes calibration: our trip-count-aware totals vs XLA's
+    once-counted bytes-accessed.
+
+  PYTHONPATH=src python scripts/gen_experiments.py
+"""
+from __future__ import annotations
+
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
 
 import benchmarks.roofline as R
 
-ROOT = Path(__file__).resolve().parents[1]
+R.ARTIFACTS = ROOT / "artifacts" / "dryrun"
 
 
-def rows_for(dirname, mesh):
-    R.ARTIFACTS = ROOT / "artifacts" / dirname
-    return [R.cell_row(rec) for rec in R.load_cells(mesh)]
+def sweep_summary() -> str:
+    parts = []
+    for mesh in ("single", "multi"):
+        ok = skip = err = 0
+        comp = []
+        for rec in R.load_cells(mesh):
+            if rec["status"] == "ok":
+                ok += 1
+                comp += [e["compile_s"] for e in rec["entries"].values()
+                         if "compile_s" in e]
+            elif rec["status"] == "skipped":
+                skip += 1
+            else:
+                err += 1
+        line = f"* `{mesh}` mesh: {ok} compiled, {skip} documented skips, " \
+               f"{err} errors"
+        if comp:
+            comp.sort()
+            line += (f"; per-program compile time min/median/max = "
+                     f"{comp[0]:.1f}/{comp[len(comp)//2]:.1f}/"
+                     f"{comp[-1]:.1f}s")
+        parts.append(line)
+    return "\n".join(parts)
 
 
-def fmt_table(rows):
-    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
-           "| useful | mem GB/dev |\n|---|---|---|---|---|---|---|---|\n")
-    out = [hdr]
-    for r in rows:
-        if r["status"] != "ok":
-            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                       f"*{r['status']}* | — | — |\n")
-            continue
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
-            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
-            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
-            f"{r['hbm_gb_per_dev']:.1f} |\n")
+def layout_table() -> str:
+    out = ["| arch | shape | mesh | layout | fits | peak GB/dev | "
+           "headroom GB | stationary | hybrid | fsdp | why |\n",
+           "|---|---|---|---|---|---|---|---|---|---|---|\n"]
+    n_cells = n_fit = 0
+    cap_gb = None
+    for mesh in ("single", "multi"):
+        for rec in R.load_cells(mesh):
+            ld = rec.get("layout_decision")
+            if not ld or "candidates" not in ld:
+                continue
+            n_cells += 1
+            n_fit += bool(ld["fits"])
+            cap_gb = ld["budget_gb"] * ld["margin"]
+            cand = {c["layout"]: c for c in ld["candidates"]}
+            peak = {k: f"{c['hbm_gb']:.2f}" for k, c in cand.items()}
+            chosen = ld["layout"]
+            for k in peak:
+                if k == chosen:
+                    peak[k] = f"**{peak[k]}**"
+            why = ("fastest feasible step" if ld["fits"]
+                   else "nothing fits; min peak")
+            out.append(
+                f"| {rec['arch']} | {rec['shape']} | {mesh} | "
+                f"**{chosen}** | {'yes' if ld['fits'] else 'NO'} | "
+                f"{cand[chosen]['hbm_gb']:.2f} | {ld['headroom_gb']:.2f} | "
+                f"{peak.get('stationary', '--')} | "
+                f"{peak.get('hybrid', '--')} | {peak.get('fsdp', '--')} | "
+                f"{why} |\n")
+    if cap_gb is not None:
+        out.append(f"\n{n_fit}/{n_cells} serve cells fit under the "
+                   f"{cap_gb:.1f} GB cap (margin x device HBM, from the "
+                   f"recorded decisions).\n")
     return "".join(out)
 
 
-def fl_agg_table(dirname):
-    R.ARTIFACTS = ROOT / "artifacts" / dirname
-    out = ["| arch | t_coll (ms) | t_mem (ms) | wire bytes/dev (GB) | "
-           "amortized /E=8 local steps (ms) |\n|---|---|---|---|---|\n"]
+def fl_agg_table() -> str:
+    out = ["| arch | t_coll (ms) | t_mem (ms) | wire GB/dev | "
+           "amortized / E=8 local steps (ms) |\n|---|---|---|---|---|\n"]
     for rec in R.load_cells("multi"):
-        if rec["status"] != "ok" or "fl_aggregate" not in rec.get("entries", {}):
-            continue
-        e = rec["entries"]["fl_aggregate"]
-        if "roofline" not in e:
+        e = rec.get("entries", {}).get("fl_aggregate", {})
+        if rec["status"] != "ok" or "roofline" not in e:
             continue
         r = e["roofline"]
         out.append(
@@ -52,49 +103,118 @@ def fl_agg_table(dirname):
     return "".join(out)
 
 
-def bench_lines(path="bench_output.txt", kinds=("summary", "tta",
-                                                   "policy", "best")):
-    p = Path(path)
-    if not p.exists():
-        return "*(benchmark log not present at generation time)*\n"
-    out = []
-    for line in p.read_text().splitlines():
-        if line.split(",")[0] in kinds:
-            out.append(line)
-    return "```\n" + "\n".join(out) + "\n```\n"
-
-
-def dryrun_summary(dirname):
-    R.ARTIFACTS = ROOT / "artifacts" / dirname
-    parts = []
+def calibration_table() -> str:
+    out = ["| arch | shape | mesh | program | ours (GB) | XLA once (GB) "
+           "| ratio |\n", "|---|---|---|---|---|---|---|\n"]
+    ratios = []
     for mesh in ("single", "multi"):
-        ok = skip = err = 0
-        comp = []
         for rec in R.load_cells(mesh):
-            if rec["status"] == "ok":
-                ok += 1
-                for e in rec["entries"].values():
-                    if "compile_s" in e:
-                        comp.append(e["compile_s"])
-            elif rec["status"] == "skipped":
-                skip += 1
-            else:
-                err += 1
-        parts.append(f"  * {mesh}: {ok} compiled, {skip} documented skips, "
-                     f"{err} errors; compile time "
-                     f"min/median/max = {min(comp):.1f}/"
-                     f"{sorted(comp)[len(comp)//2]:.1f}/{max(comp):.1f}s")
-    return "\n".join(parts)
+            if rec["status"] != "ok":
+                continue
+            for name, e in rec["entries"].items():
+                if "hlo_cost" not in e:
+                    continue
+                ours = e["hlo_cost"]["hbm_bytes"]
+                xla = e["xla_cost_analysis_once"]["bytes_accessed"]
+                if xla <= 0:
+                    continue
+                ratios.append((ours / xla, rec["arch"], rec["shape"], mesh,
+                               name, ours, xla))
+    ratios.sort(key=lambda t: t[0])
+    # show the extremes + the CNN cell the calibration targeted
+    picked = ratios[:3] + ratios[-3:] + \
+        [t for t in ratios if t[1].startswith("flight-cnn")]
+    seen = set()
+    for ratio, arch, shape, mesh, name, ours, xla in picked:
+        key = (arch, shape, mesh, name)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"| {arch} | {shape} | {mesh} | {name} | "
+                   f"{ours/1e9:.2f} | {xla/1e9:.2f} | {ratio:.2f} |\n")
+    if ratios:
+        med = ratios[len(ratios) // 2][0]
+        out.append(f"\nAcross {len(ratios)} compiled programs the "
+                   f"ours/XLA ratio spans {ratios[0][0]:.2f}x to "
+                   f"{ratios[-1][0]:.2f}x (median {med:.2f}x). Ratios "
+                   f"well above 1 are scanned programs where XLA counts "
+                   f"the loop body once and we multiply trip counts; "
+                   f"before the fusion-boundary calibration the CNN "
+                   f"train cell sat at ~3600x.\n")
+    return "".join(out)
 
 
-TEMPLATE = open(ROOT / "scripts" / "experiments_template.md").read()
+HEADER = """\
+# EXPERIMENTS — dry-run sweep, roofline tables, layout policy
 
-out = TEMPLATE
-out = out.replace("{{DRYRUN_SUMMARY}}", dryrun_summary("dryrun_opt"))
-out = out.replace("{{TABLE_SINGLE_OPT}}", fmt_table(rows_for("dryrun_opt", "single")))
-out = out.replace("{{TABLE_MULTI_OPT}}", fmt_table(rows_for("dryrun_opt", "multi")))
-out = out.replace("{{TABLE_SINGLE_BASE}}", fmt_table(rows_for("dryrun", "single")))
-out = out.replace("{{FL_AGG_TABLE}}", fl_agg_table("dryrun_opt"))
-out = out.replace("{{BENCH_SUMMARIES}}", bench_lines())
-(ROOT / "EXPERIMENTS.md").write_text(out)
-print("wrote EXPERIMENTS.md", len(out), "bytes")
+Generated by `scripts/gen_experiments.py` from `artifacts/dryrun/*.json`
+(the output of `PYTHONPATH=src python -m repro.launch.dryrun --all --mesh
+both`).  Regenerate after re-running the sweep; do not edit the tables by
+hand.
+
+Conventions: flops / bytes are PER DEVICE from the trip-count-aware HLO
+cost model (`repro/dist/hlo_cost.py`); the hardware model is one
+v5e-class chip (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI, 16 GB
+HBM — see `repro/dist/hlo_analysis.py` and `repro/dist/policy.py`).
+`mem GB/dev` is XLA's `memory_analysis` (arguments + temporaries).
+Memory numbers come from the CPU backend's SPMD compile: temporaries are
+pessimistic vs a real TPU lowering, so treat `fits` as a conservative
+verdict.
+
+## Sweep health
+
+{SUMMARY}
+
+## Layout policy decisions (serve cells)
+
+For every prefill/decode cell the dry-run AOT-compiles all three weight
+layouts — `stationary` (TP-only weights, replicated over data), `hybrid`
+(stationary body + vocab tables sharded over data), `fsdp` (the training
+layout) — and `repro.dist.policy` picks the fastest layout whose peak
+per-device HBM fits under 90% of device HBM; with no fit it falls back
+to the smallest peak (see `README.md` “How layout selection works”).
+Peak GB columns show each candidate; the chosen one is bold.
+
+{LAYOUT}
+
+## Roofline — single-pod mesh (data=16, model=16; 256 chips)
+
+{TABLE_SINGLE}
+
+## Roofline — multi-pod mesh (pod=2, data=16, model=16; 512 chips)
+
+On the multi-pod mesh `train_4k` runs the federated-island layout (one
+island per pod) and additionally lowers the `fl_aggregate` weight
+exchange.
+
+{TABLE_MULTI}
+
+## FL weight exchange (fl_aggregate, multi-pod mesh)
+
+{FL_AGG}
+
+As the paper's communication-cost analysis predicts, the exchange is
+collective-bound for every arch; the amortized column divides by the
+paper's E=8 local steps between exchanges.
+
+## hbm_bytes calibration (trip-count model vs XLA bytes-accessed)
+
+{CALIBRATION}
+"""
+
+
+def main():
+    single = R.markdown_table(
+        [r for r in map(R.cell_row, R.load_cells("single")) if r])
+    multi = R.markdown_table(
+        [r for r in map(R.cell_row, R.load_cells("multi")) if r])
+    out = HEADER.format(SUMMARY=sweep_summary(), LAYOUT=layout_table(),
+                        TABLE_SINGLE=single, TABLE_MULTI=multi,
+                        FL_AGG=fl_agg_table(),
+                        CALIBRATION=calibration_table())
+    (ROOT / "EXPERIMENTS.md").write_text(out)
+    print(f"wrote EXPERIMENTS.md ({len(out)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

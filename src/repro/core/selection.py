@@ -15,6 +15,23 @@ Algorithm 2 (training-time-based):  select w iff T_one_w*r + T_transmit_w
   <= T; grow T to the cheapest not-yet-selected worker's total time only
   when the round-over-round accuracy gain falls below threshold A (Eq. 3).
 
+  Knob -> paper symbol map (Algorithm 2 / Eq. 3):
+    TimeBasedState.T        T      time allowed for one round (init 0: the
+                                   first update admits the single cheapest
+                                   worker, exactly the paper's bootstrap)
+    TimeBasedState.r        r      unified local epochs per round
+    TimeBasedState.A        A      accuracy-improvement threshold; a round
+                                   gaining less than A triggers Eq. 3
+    TimeBasedState.acc_prev acc_1  previous round's global accuracy
+                                   (acc_2 is the `acc_now` argument)
+    WorkerStats.t_one       T_one      one local epoch's training time
+    WorkerStats.t_transmit  T_transmit model up/down transfer time
+    _total_time(s, r)       T_total    = T_one * r + T_transmit
+  `time_based_select` is Algorithm 2 lines 2-6 (the admission filter);
+  `time_based_update` is lines 7-12 / Eq. 3 (the growth rule), with T
+  monotone non-decreasing (see its docstring for the divergence the
+  literal reading causes).
+
 Plus baselines: all / random / sequential (the paper's comparison lines).
 All policies are pure functions of WorkerStats -> deterministic + testable.
 """

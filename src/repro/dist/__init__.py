@@ -2,7 +2,11 @@
 
 Submodules (import them directly; nothing heavy happens at package import):
   sharding     -- logical-axis -> PartitionSpec resolution, constrain(),
-                  rule sets (DEFAULT / ISLAND / SERVE) used by every model
+                  rule sets (DEFAULT / ISLAND / SERVE / HYBRID_SERVE) and
+                  the serve_layout_rules() factory used by every model
+  policy       -- memory-aware serve-layout policy: scores the candidate
+                  layouts (stationary / hybrid / fsdp) by peak per-device
+                  HBM + predicted step time and picks one per cell
   hlo_cost     -- trip-count-aware HLO-text cost model (XLA's own
                   cost_analysis counts scan bodies once; ours multiplies)
   hlo_analysis -- collective-traffic accounting, XLA cost/memory analysis

@@ -1,0 +1,263 @@
+"""Memory-aware serve-layout policy: pick weight placement from measured HBM.
+
+FLight's resource manager places FL work on heterogeneous workers using
+cheap heuristics over measured capacity (paper SSIII-B).  This module is
+the serving analogue for the SPMD stack: per (arch x shape x mesh) cell it
+picks HOW weights are laid out across the mesh from the program's own
+memory numbers, replacing the hardcoded `n_params * 2 / TP < 8 GB` check
+that used to live in launch/dryrun.py.
+
+Candidate layouts (dist/sharding.py::SERVE_LAYOUTS, most stationary
+first):
+
+  stationary -- SERVE_RULES: weights tensor-parallel over "model" only,
+                replicated over "data"; zero weight traffic per step.
+  hybrid     -- HYBRID_SERVE_RULES: body weights stationary, but the
+                embedding / lm_head tables (logical "vocab"/"embed" dims)
+                also shard over "data"; for models whose body fits but
+                whose vocab tables blow the budget.
+  fsdp       -- DEFAULT_RULES: fully-sharded weights (the training
+                layout); always fits, pays weight all-gathers per step.
+
+Decision procedure (`decide`): every candidate gets a CandidateEval with
+predicted peak per-device HBM and predicted step time.  A candidate is
+FEASIBLE when `hbm_bytes <= DEVICE_HBM_BYTES * margin` (margin defaults to
+0.9: leave 10% headroom for allocator fragmentation + collective
+scratch).  Among feasible candidates the fastest predicted step wins
+(ties: the more stationary layout, i.e. earlier in SERVE_LAYOUTS order).
+If NOTHING fits -- the huge-MoE case -- the policy falls back to the
+candidate with the smallest peak (fsdp in practice) and flags
+`fits=False`.
+
+Evaluators (where the numbers come from):
+
+  * eval_from_compiled(...)  -- XLA ground truth: `memory_analysis` of an
+    AOT-compiled program (launch/dryrun.py compiles every candidate and
+    caches the probes in the artifact JSON), step time from the
+    trip-count-aware hlo_cost roofline.
+  * analytic_eval(...)       -- no compile: exact per-device param / cache
+    / input bytes from the ParamDef tree resolved through the candidate's
+    RuleSet, plus an activation-workspace term; used by launch/serve.py
+    and ServeLoop where compiling three layouts first is not acceptable.
+
+EXPERIMENTS.md ("Layout policy decisions") tabulates the chosen layout and
+headroom for every cell of the committed dryrun sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.dist.sharding import (SERVE_LAYOUTS, logical_to_mesh_spec,
+                                 serve_layout_rules)
+
+#: Per-device HBM of the modeled chip (v5e-class, 16 GB; see the hardware
+#: constants in dist/hlo_analysis.py).
+DEVICE_HBM_BYTES = 16e9
+
+#: Fraction of DEVICE_HBM_BYTES a layout may use before it is infeasible.
+DEFAULT_MARGIN = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Evaluations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateEval:
+    """Predicted peak HBM + step time for one layout candidate."""
+    layout: str
+    hbm_bytes: float          # peak per-device HBM the program needs
+    step_time_s: float        # predicted step time (roofline bound)
+    source: str = "analytic"  # "xla" (compiled memory_analysis) | "analytic"
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {"layout": self.layout, "hbm_bytes": self.hbm_bytes,
+                "hbm_gb": round(self.hbm_bytes / 1e9, 3),
+                "step_time_s": self.step_time_s, "source": self.source,
+                **({"detail": self.detail} if self.detail else {})}
+
+
+def peak_hbm_bytes(memory_analysis: dict) -> float:
+    """Peak per-device HBM from an XLA `memory_analysis` dict.
+
+    arguments + temporaries + the non-aliased slice of the outputs
+    (donated/aliased outputs live in their argument's buffer).
+    """
+    args = memory_analysis.get("argument_size_in_bytes", 0)
+    temp = memory_analysis.get("temp_size_in_bytes", 0)
+    out = memory_analysis.get("output_size_in_bytes", 0)
+    alias = memory_analysis.get("alias_size_in_bytes", 0)
+    return float(args + temp + max(out - alias, 0))
+
+
+def eval_from_compiled(layout: str, memory_analysis: dict,
+                       roofline: dict) -> CandidateEval:
+    """CandidateEval from dryrun-grade numbers (XLA memory_analysis +
+    hlo_cost roofline dict with a `bound_s` key)."""
+    return CandidateEval(
+        layout=layout,
+        hbm_bytes=peak_hbm_bytes(memory_analysis),
+        step_time_s=float(roofline.get("bound_s", 0.0)),
+        source="xla",
+        detail={"memory_analysis": dict(memory_analysis)})
+
+
+# ---------------------------------------------------------------------------
+# Analytic evaluator (no compile)
+# ---------------------------------------------------------------------------
+
+def _def_leaves(defs):
+    import jax
+    from repro.models.param import is_def
+    return jax.tree.leaves(defs, is_leaf=is_def)
+
+
+def sharded_bytes(defs, mesh, rules) -> float:
+    """Exact per-device bytes of a ParamDef tree laid out under `rules`."""
+    sizes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    total = 0.0
+    for d in _def_leaves(defs):
+        spec = logical_to_mesh_spec(d.logical_axes, d.shape, mesh, rules)
+        shard = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                shard *= sizes.get(ax, 1)
+        total += (d.dtype.itemsize * math.prod(d.shape)) / shard
+    return total
+
+
+def analytic_eval(model, shape, mesh, layout: str, *,
+                  hbm_bw: float | None = None) -> CandidateEval:
+    """Compile-free CandidateEval: param/cache/input bytes from the
+    ParamDef tree resolved through the layout's RuleSet, plus a 2-deep
+    activation workspace, with a weight/cache-streaming step-time proxy.
+
+    The step-time proxy charges every byte the device must READ each step
+    (stationary weights stream from local HBM; fsdp weights must first be
+    gathered -- charged at ICI bandwidth, which is what makes stationary
+    win whenever it fits).
+    """
+    from repro.dist.hlo_analysis import HBM_BW, ICI_BW
+    hbm_bw = hbm_bw or HBM_BW
+    rules = serve_layout_rules(layout)
+    stationary = serve_layout_rules("stationary")
+
+    p_bytes = sharded_bytes(model.param_defs(), mesh, rules)
+    in_bytes = sharded_bytes(model.input_defs(shape), mesh, rules)
+    c_bytes = 0.0
+    if shape.kind == "decode":
+        c_bytes = sharded_bytes(
+            model.cache_defs(shape.global_batch, shape.seq_len), mesh, rules)
+    # activation workspace: ~2 live (tokens/dev, d_model) bf16 copies
+    sizes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    data_deg = sizes.get("data", 1) * sizes.get("pod", 1)
+    toks = shape.global_batch * (1 if shape.kind == "decode" else
+                                 shape.seq_len)
+    act_bytes = 2.0 * (toks / max(data_deg, 1)) * \
+        getattr(model.cfg, "d_model", 1) * 2
+
+    # weight bytes that must be gathered per step to run stationary-style
+    # compute (0 for stationary by construction)
+    p_stationary = sharded_bytes(model.param_defs(), mesh, stationary)
+    gather_bytes = max(p_stationary - p_bytes, 0.0)
+    step = (p_bytes + c_bytes + act_bytes) / hbm_bw + gather_bytes / ICI_BW
+    return CandidateEval(
+        layout=layout,
+        hbm_bytes=p_bytes + c_bytes + in_bytes + act_bytes,
+        step_time_s=step,
+        source="analytic",
+        detail={"param_bytes": p_bytes, "cache_bytes": c_bytes,
+                "activation_bytes": act_bytes,
+                "gather_bytes_per_step": gather_bytes})
+
+
+# ---------------------------------------------------------------------------
+# Decision
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayoutDecision:
+    """The chosen layout plus the full per-candidate scoring table."""
+    layout: str
+    fits: bool                      # chosen candidate under budget*margin?
+    budget_bytes: float
+    margin: float
+    evals: tuple                    # CandidateEval, in evaluation order
+    reason: str
+
+    @property
+    def rules(self):
+        return serve_layout_rules(self.layout)
+
+    @property
+    def chosen(self) -> CandidateEval:
+        for e in self.evals:
+            if e.layout == self.layout:
+                return e
+        raise KeyError(self.layout)
+
+    def headroom_bytes(self, e: CandidateEval | None = None) -> float:
+        e = e or self.chosen
+        return self.budget_bytes * self.margin - e.hbm_bytes
+
+    def as_dict(self) -> dict:
+        return {
+            "layout": self.layout, "fits": self.fits,
+            "budget_gb": round(self.budget_bytes / 1e9, 2),
+            "margin": self.margin,
+            "headroom_gb": round(self.headroom_bytes() / 1e9, 3),
+            "reason": self.reason,
+            "candidates": [e.as_dict() for e in self.evals],
+        }
+
+
+def decide(evals, *, budget_bytes: float = DEVICE_HBM_BYTES,
+           margin: float = DEFAULT_MARGIN) -> LayoutDecision:
+    """Headroom-aware scoring: feasible = peak HBM <= budget*margin; the
+    fastest feasible candidate wins (ties: first in `evals` order, which
+    callers pass most-stationary-first).  With no feasible candidate the
+    smallest peak wins and `fits=False` (huge-MoE fallback)."""
+    evals = tuple(evals)
+    if not evals:
+        raise ValueError("no candidate evaluations")
+    cap = budget_bytes * margin
+    feasible = [e for e in evals if e.hbm_bytes <= cap]
+    if feasible:
+        best = min(feasible, key=lambda e: e.step_time_s)
+        reason = (f"{best.layout}: peak {best.hbm_bytes/1e9:.2f} GB <= "
+                  f"{cap/1e9:.2f} GB budget "
+                  f"(headroom {(cap-best.hbm_bytes)/1e9:.2f} GB), fastest "
+                  f"feasible step {best.step_time_s:.3g}s of "
+                  f"{len(feasible)}/{len(evals)} feasible")
+        return LayoutDecision(best.layout, True, budget_bytes, margin,
+                              evals, reason)
+    best = min(evals, key=lambda e: e.hbm_bytes)
+    reason = (f"no layout fits under {cap/1e9:.2f} GB "
+              f"({margin:.0%} of {budget_bytes/1e9:.0f} GB); falling back "
+              f"to min-peak {best.layout} at {best.hbm_bytes/1e9:.2f} GB "
+              f"(over by {(best.hbm_bytes-cap)/1e9:.2f} GB)")
+    return LayoutDecision(best.layout, False, budget_bytes, margin,
+                          evals, reason)
+
+
+def choose_serve_layout(evaluate, *, layouts=None,
+                        budget_bytes: float = DEVICE_HBM_BYTES,
+                        margin: float = DEFAULT_MARGIN) -> LayoutDecision:
+    """Evaluate every candidate layout with `evaluate(name) ->
+    CandidateEval` (most-stationary-first order) and decide."""
+    layouts = list(layouts) if layouts is not None else list(SERVE_LAYOUTS)
+    return decide([evaluate(name) for name in layouts],
+                  budget_bytes=budget_bytes, margin=margin)
+
+
+def analytic_serve_decision(model, shape, mesh, *,
+                            budget_bytes: float = DEVICE_HBM_BYTES,
+                            margin: float = DEFAULT_MARGIN) -> LayoutDecision:
+    """Compile-free decision for serve launchers (serve.py / ServeLoop)."""
+    return choose_serve_layout(
+        lambda name: analytic_eval(model, shape, mesh, name),
+        budget_bytes=budget_bytes, margin=margin)

@@ -82,6 +82,33 @@ ISLAND_RULES = DEFAULT_RULES.replacing(batch=("data",))
 SERVE_RULES = DEFAULT_RULES.replacing(
     embed=(), embed_tp=("model",), vocab=("model",))
 
+# Hybrid serving: body weights stay stationary (TP-only, like SERVE_RULES)
+# but the embedding / lm_head tables also shard over "data".  Only those
+# two tables carry a "vocab" logical dim, so widening the vocab rule to
+# the ("model", "data") stack shards exactly them and nothing else --
+# halfway house for models whose body fits stationary but whose vocab
+# tables blow the per-device budget.
+HYBRID_SERVE_RULES = SERVE_RULES.replacing(vocab=(("model", "data"),))
+
+#: serve layout name -> RuleSet, in decreasing weight-stationarity.  The
+#: layout POLICY (dist/policy.py) picks between these per (arch x shape x
+#: mesh) from memory_analysis numbers; this factory is the single place
+#: that names them.
+SERVE_LAYOUTS = {
+    "stationary": SERVE_RULES,
+    "hybrid": HYBRID_SERVE_RULES,
+    "fsdp": DEFAULT_RULES,
+}
+
+
+def serve_layout_rules(layout: str) -> RuleSet:
+    """RuleSet for a named serve layout (see SERVE_LAYOUTS)."""
+    try:
+        return SERVE_LAYOUTS[layout]
+    except KeyError:
+        raise KeyError(f"unknown serve layout '{layout}'; "
+                       f"known: {sorted(SERVE_LAYOUTS)}") from None
+
 
 # ---------------------------------------------------------------------------
 # Resolution

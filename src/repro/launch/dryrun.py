@@ -13,6 +13,12 @@ Per cell this AOT-compiles (no device allocation beyond host placeholders):
 and records memory_analysis / cost_analysis / per-collective traffic into
 artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline tables.
 
+Serve cells (prefill/decode) AOT-compile every candidate weight layout
+(stationary / hybrid / fsdp, see dist/sharding.SERVE_LAYOUTS) and let
+repro.dist.policy pick one from the XLA memory_analysis numbers with
+headroom-aware scoring; the decision (chosen layout, per-candidate peak
+HBM, headroom, reason) lands in the artifact under "layout_decision".
+
 Usage:
   python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k --mesh multi
   python -m repro.launch.dryrun --all [--mesh both] [--force]
@@ -48,8 +54,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.core import federated
     from repro.dist import hlo_analysis as H
     from repro.dist import hlo_cost
+    from repro.dist import policy as dist_policy
     from repro.dist.sharding import (DEFAULT_RULES, ISLAND_RULES,
-                                     SERVE_RULES, spec_tree_for, use_rules)
+                                     serve_layout_rules, spec_tree_for,
+                                     use_rules)
     from repro.launch import steps as S
     from repro.launch.mesh import make_production_mesh, n_islands
     from repro.models import build_model
@@ -58,7 +66,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.optim import adamw, opt_state_defs
 
     overrides = dict(overrides or {})
-    use_serve_rules = overrides.pop("_serve_rules", True)
+    # layout override for sweeps: "auto" (policy decides), or a layout
+    # name from sharding.SERVE_LAYOUTS.  Legacy `_serve_rules: False`
+    # means "force the FSDP training layout".
+    forced_layout = overrides.pop("_layout", None)
+    if forced_layout == "auto":
+        forced_layout = None          # explicit "auto" = policy decides
+    if not overrides.pop("_serve_rules", True):
+        forced_layout = forced_layout or "fsdp"
     cfg = get_config(arch)
     if overrides:
         import dataclasses as _dc
@@ -168,31 +183,46 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "note": "single island on the single-pod mesh: the exchange "
                         "is an identity; lowered on the multi-pod mesh"}
 
-    else:  # prefill / decode: stationary (TP-only) weights, see SERVE_RULES
-        # stationary weights must FIT when replicated over data: bf16 params
-        # / TP degree <= 8 GB/device, else keep the FSDP layout (huge MoE)
-        fits = model.n_params * 2 / mesh.shape["model"] < 8e9
-        serve_rules = SERVE_RULES if (use_serve_rules and fits) \
-            else DEFAULT_RULES
+    else:  # prefill / decode: weight layout picked by repro.dist.policy
         p_defs = model.param_defs()
         in_defs = model.input_defs(shape)
         if shape.kind == "prefill":
+            base = "prefill_step"
             step = S.make_prefill_step(model)
-            args = (abstract_params(p_defs), abstract_params(in_defs))
-            shardings = (specs(p_defs, serve_rules),
-                         specs(in_defs, serve_rules))
-            lower_entry("prefill_step", step, shardings, args,
-                        rules=serve_rules)
+            all_defs, donate = (p_defs, in_defs), ()
         else:
+            base = "decode_step"
             c_defs = model.cache_defs(shape.global_batch, shape.seq_len)
             step = S.make_decode_step(model)
-            args = (abstract_params(p_defs), abstract_params(in_defs),
-                    abstract_params(c_defs))
-            shardings = (specs(p_defs, serve_rules),
-                         specs(in_defs, serve_rules),
-                         specs(c_defs, serve_rules))
-            lower_entry("decode_step", step, shardings, args, donate=(2,),
-                        rules=serve_rules)
+            all_defs, donate = (p_defs, in_defs, c_defs), (2,)
+        args = tuple(abstract_params(d) for d in all_defs)
+
+        def probe(layout):
+            """AOT-compile the step under one candidate layout; the policy
+            scores the XLA memory_analysis + hlo_cost roofline."""
+            rules = serve_layout_rules(layout)
+            entry = lower_entry(f"{base}@{layout}", step,
+                                tuple(specs(d, rules) for d in all_defs),
+                                args, donate=donate, rules=rules)
+            return dist_policy.eval_from_compiled(
+                layout, entry["memory_analysis"], entry["roofline"])
+
+        if forced_layout:
+            probe(forced_layout)
+            result["entries"][base] = \
+                result["entries"].pop(f"{base}@{forced_layout}")
+            result["layout_decision"] = {"layout": forced_layout,
+                                         "reason": "forced by override"}
+        else:
+            decision = dist_policy.choose_serve_layout(probe)
+            result["layout_decision"] = decision.as_dict()
+            # canonical entry = the chosen probe; losing probes stay only
+            # as compact evals inside layout_decision["candidates"]
+            result["entries"][base] = \
+                result["entries"].pop(f"{base}@{decision.layout}")
+            for k in [k for k in result["entries"]
+                      if k.startswith(base + "@")]:
+                del result["entries"][k]
 
     return result
 
@@ -260,6 +290,9 @@ def main():
     out.write_text(json.dumps(res, indent=2, default=str))
     print(json.dumps({k: v for k, v in res.items() if k != "entries"},
                      indent=2, default=str))
+    if "layout_decision" in res:
+        d = res["layout_decision"]
+        print(f"  layout={d['layout']} ({d.get('reason', '')})")
     for ename, e in res.get("entries", {}).items():
         if "roofline" in e:
             r = e["roofline"]

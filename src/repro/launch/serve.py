@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
       --smoke --batch 4 --prompt-len 64 --gen 32
+
+Weight layout (stationary / hybrid / fsdp) is chosen by the memory-aware
+policy in repro.dist.policy (`--layout auto`, the default), or forced
+with `--layout <name>`.  The chosen RuleSet is ambient while the steps
+trace, so `constrain()` calls in model code resolve against it; at smoke
+scale (1 host device) every layout degenerates to replicated and the
+decision is only reported.
 """
 from __future__ import annotations
 
@@ -13,8 +20,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.dist import policy as dist_policy
+from repro.dist.sharding import SERVE_LAYOUTS, use_rules
+from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import build_model
+from repro.models.config import ShapeConfig
+
+
+def pick_layout(model, mesh, *, batch: int, seq_len: int,
+                layout: str = "auto"):
+    """Resolve the serve weight layout: the policy's analytic decision
+    for "auto", else the named layout (the full candidate table is still
+    computed so the caller can log headroom)."""
+    import dataclasses
+    shape = ShapeConfig("serve", "decode", seq_len, batch)
+    decision = dist_policy.analytic_serve_decision(model, shape, mesh)
+    if layout != "auto" and layout != decision.layout:
+        forced = next(e for e in decision.evals if e.layout == layout)
+        decision = dataclasses.replace(
+            decision, layout=layout,
+            fits=forced.hbm_bytes
+            <= decision.budget_bytes * decision.margin,
+            reason=f"forced --layout {layout} (policy preferred "
+                   f"{decision.layout}: {decision.reason})")
+    return decision
 
 
 def main(argv=None):
@@ -26,11 +56,21 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto"] + sorted(SERVE_LAYOUTS))
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
+    mesh = make_host_mesh()
+    decision = pick_layout(model, mesh, batch=args.batch,
+                           seq_len=args.prompt_len + args.gen,
+                           layout=args.layout)
+    print(f"[serve] layout={decision.layout} "
+          f"(peak {decision.chosen.hbm_bytes/1e9:.2f} GB/dev, "
+          f"headroom {decision.headroom_bytes()/1e9:.2f} GB) "
+          f"-- {decision.reason}")
     prefill = jax.jit(make_prefill_step(model))
     decode = jax.jit(make_decode_step(model))
 
@@ -45,22 +85,26 @@ def main(argv=None):
         batch["frames"] = jnp.asarray(
             rng.normal(size=(B, T, cfg.d_model)), jnp.bfloat16)
 
-    t0 = time.time()
-    nxt, cache = prefill(params, batch)
-    jax.block_until_ready(nxt)
-    t_prefill = time.time() - t0
-    print(f"[serve] prefill {B}x{T}: {t_prefill*1e3:.1f}ms "
-          f"({B*T/t_prefill:.0f} tok/s)")
+    # rules AND mesh must be ambient while the steps TRACE (first call):
+    # constrain() in model code no-ops without an ambient mesh, so the
+    # chosen layout only binds under both contexts
+    with use_rules(decision.rules), mesh:
+        t0 = time.time()
+        nxt, cache = prefill(params, batch)
+        jax.block_until_ready(nxt)
+        t_prefill = time.time() - t0
+        print(f"[serve] prefill {B}x{T}: {t_prefill*1e3:.1f}ms "
+              f"({B*T/t_prefill:.0f} tok/s)")
 
-    out = [np.asarray(nxt)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        nxt, cache = decode(params, {
-            "tokens": nxt[:, None].astype(jnp.int32),
-            "positions": jnp.full((B, 1), T + i, jnp.int32)}, cache)
-        out.append(np.asarray(nxt))
-    jax.block_until_ready(nxt)
-    t_dec = time.time() - t0
+        out = [np.asarray(nxt)]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            nxt, cache = decode(params, {
+                "tokens": nxt[:, None].astype(jnp.int32),
+                "positions": jnp.full((B, 1), T + i, jnp.int32)}, cache)
+            out.append(np.asarray(nxt))
+        jax.block_until_ready(nxt)
+        t_dec = time.time() - t0
     toks = np.stack(out, axis=1)
     print(f"[serve] decode {args.gen} steps: {t_dec*1e3:.1f}ms "
           f"({B*(args.gen-1)/max(t_dec,1e-9):.0f} tok/s)")

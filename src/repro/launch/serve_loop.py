@@ -7,11 +7,14 @@ the vmapped cache writes in models/layers.py), and finished slots are
 recycled.  Prefill compiles once per distinct prompt length (callers can
 bucket prompts if they need a tighter jit cache).
 
-CPU-runnable at smoke scale; the same loop drives TPU serving with the
-SERVE_RULES sharding (stationary weights).
+CPU-runnable at smoke scale; the same loop drives TPU serving, with the
+weight layout (stationary / hybrid / fsdp) picked per model by the
+memory-aware policy in repro.dist.policy -- pass `mesh=` to get an
+analytic decision, or `layout=` to force one.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -30,11 +33,24 @@ class Request:
 
 class ServeLoop:
     def __init__(self, model, params, *, max_batch: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, mesh=None, layout: str = "auto"):
         self.model = model
         self.params = params
         self.B = max_batch
         self.S = max_len
+        self.layout_decision = None
+        self.rules = None
+        self.mesh = mesh
+        if layout != "auto":
+            from repro.dist.sharding import serve_layout_rules
+            self.rules = serve_layout_rules(layout)
+        elif mesh is not None:
+            from repro.dist import policy as dist_policy
+            from repro.models.config import ShapeConfig
+            self.layout_decision = dist_policy.analytic_serve_decision(
+                model, ShapeConfig("serve", "decode", max_len, max_batch),
+                mesh)
+            self.rules = self.layout_decision.rules
         from repro.models.param import is_def
         self.cache = jax.tree.map(
             lambda d: jnp.zeros(d.shape, d.dtype),
@@ -48,16 +64,31 @@ class ServeLoop:
         self._prefill = jax.jit(self._prefill_impl)
 
     # -- jitted kernels -------------------------------------------------
+    def _rules_ctx(self):
+        """Make the chosen layout's rules AND the mesh ambient while a
+        step traces: constrain() in model code no-ops without an ambient
+        mesh, so the layout only binds under both (plain nullcontext for
+        CPU smoke tests with neither)."""
+        stack = contextlib.ExitStack()
+        if self.rules is not None:
+            from repro.dist.sharding import use_rules
+            stack.enter_context(use_rules(self.rules))
+        if self.mesh is not None:
+            stack.enter_context(self.mesh)
+        return stack
+
     def _prefill_impl(self, params, tokens):
-        logits, cache = self.model.apply(params, {"tokens": tokens},
-                                         mode="prefill")
+        with self._rules_ctx():
+            logits, cache = self.model.apply(params, {"tokens": tokens},
+                                             mode="prefill")
         nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
         return nxt, cache
 
     def _decode_impl(self, params, cache, tokens, positions):
-        logits, cache = self.model.apply(
-            params, {"tokens": tokens, "positions": positions},
-            mode="decode", cache=cache)
+        with self._rules_ctx():
+            logits, cache = self.model.apply(
+                params, {"tokens": tokens, "positions": positions},
+                mode="decode", cache=cache)
         nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
         return nxt, cache
 

@@ -1,0 +1,25 @@
+"""The docs lint (scripts/check_docs.py) must stay green in tier-1 too:
+broken relative links and undocumented dist modules fail here, not just in
+the CI docs job."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "scripts"))
+
+import check_docs
+
+
+def test_relative_links_resolve():
+    problems = []
+    for name in check_docs.DOCS:
+        doc = check_docs.ROOT / name
+        if doc.exists():
+            problems += check_docs.check_links(doc)
+    assert problems == []
+
+
+def test_dist_modules_have_docstrings():
+    problems = []
+    for rel in check_docs.DOCSTRING_ROOTS:
+        problems += check_docs.check_docstrings(check_docs.ROOT / rel)
+    assert problems == []
