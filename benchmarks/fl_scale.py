@@ -1,0 +1,125 @@
+"""FL simulation throughput benchmark -> BENCH_fl.json (the perf
+trajectory for the scenario engine; run by the `scale` CI job).
+
+Measures rounds/sec (sync) and merges/sec (async) of the scenario engine
+at 10^3 and 10^5 simulated workers, under the full churn + straggler +
+non-IID-drift load.  Timing covers the WHOLE loop: vectorized population
+timing, shard synthesis, the vmapped cohort train step, the
+edge->fog->cloud fold, and evaluation.
+
+  PYTHONPATH=src python benchmarks/fl_scale.py          # measure + write
+  PYTHONPATH=src python benchmarks/fl_scale.py --check  # compare-or-commit:
+      writes BENCH_fl.json if missing, else fails (exit 1) when any cell
+      regressed below REGRESSION_FACTOR x its committed throughput.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.scenarios import ScenarioConfig, ScenarioSim  # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fl.json")
+REGRESSION_FACTOR = 3.0   # fail --check when > 3x slower than committed
+
+SYNC_ROUNDS = 5
+ASYNC_MERGES = 64
+
+
+def scenario(n_workers: int) -> ScenarioConfig:
+    return ScenarioConfig(
+        n_workers=n_workers, cohort_size=16, participation=0.05,
+        churn_leave=0.02, churn_join=0.02, straggler_frac=0.05, drift=0.3,
+        dirichlet_alpha=0.5, epochs=1, samples_per_worker=64, seed=1)
+
+
+def measure(n_workers: int) -> dict:
+    cfg = scenario(n_workers)
+    # warm the jit caches outside the timed region so the numbers track the
+    # steady-state loop, not compilation
+    ScenarioSim(cfg).run_sync(1)
+
+    t0 = time.monotonic()
+    sync = ScenarioSim(cfg).run_sync(SYNC_ROUNDS)
+    sync_wall = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    asyn = ScenarioSim(cfg).run_async(ASYNC_MERGES)
+    async_wall = time.monotonic() - t0
+
+    return {
+        f"sync_n{n_workers}": {
+            "workers": n_workers, "rounds": SYNC_ROUNDS,
+            "wall_s": round(sync_wall, 3),
+            "rounds_per_s": round(SYNC_ROUNDS / sync_wall, 3),
+            "best_acc": round(sync.best_acc, 4),
+        },
+        f"async_n{n_workers}": {
+            "workers": n_workers, "merges": ASYNC_MERGES,
+            "wall_s": round(async_wall, 3),
+            "rounds_per_s": round(ASYNC_MERGES / async_wall, 3),
+            "best_acc": round(asyn.best_acc, 4),
+        },
+    }
+
+
+def run_all() -> dict:
+    cells = {}
+    for n in (1_000, 100_000):
+        print(f"[fl_scale] measuring n_workers={n} ...", flush=True)
+        cells.update(measure(n))
+    return {
+        "bench": "fl_scale",
+        "scenario": "churn+stragglers+non-IID drift, 5% participation",
+        "cells": cells,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_fl.json "
+                         "(write it when missing)")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+
+    result = run_all()
+    for name, cell in result["cells"].items():
+        print(f"[fl_scale] {name}: {cell['rounds_per_s']} rounds/s "
+              f"({cell['wall_s']}s wall, best_acc {cell['best_acc']})")
+
+    if args.check and os.path.exists(args.out):
+        with open(args.out) as f:
+            committed = json.load(f)
+        failures = []
+        for name, cell in result["cells"].items():
+            old = committed.get("cells", {}).get(name)
+            if old is None:
+                continue
+            floor = old["rounds_per_s"] / REGRESSION_FACTOR
+            status = "OK" if cell["rounds_per_s"] >= floor else "REGRESSED"
+            print(f"[fl_scale] check {name}: {cell['rounds_per_s']} vs "
+                  f"committed {old['rounds_per_s']} (floor {floor:.3f}) "
+                  f"{status}")
+            if status == "REGRESSED":
+                failures.append(name)
+        if failures:
+            print(f"[fl_scale] FAIL: throughput regression in {failures}")
+            return 1
+        print("[fl_scale] check passed")
+        return 0
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[fl_scale] wrote {os.path.abspath(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

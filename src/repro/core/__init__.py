@@ -6,7 +6,10 @@
 #   server      -- versioned aggregation server + policy feedback (Eq. 1-3)
 #   events      -- discrete-event sync/async FL engine (paper experiments)
 #   federated   -- Tier B: FL as one mixing collective over the pod axis
+#   hierarchy   -- two-tier edge->fog->cloud aggregation (== flat, by test)
+#   scenarios   -- 10^5-worker churn/straggler/drift scenario engine
 #   warehouse   -- pointer-addressed weight store w/ one-time credentials
 #   compression -- int8 delta compression with error feedback (beyond-paper)
 from repro.core import (aggregation, client, compression, cost_model, events,
-                        federated, selection, server, warehouse)
+                        federated, hierarchy, scenarios, selection, server,
+                        warehouse)

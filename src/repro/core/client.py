@@ -37,6 +37,15 @@ class LocalTrainer:
         self._train = jax.jit(self._train_impl, static_argnames=("epochs",))
         self._eval = jax.jit(self._eval_impl)
 
+        def cohort_impl(params, images, labels, keys, epochs):
+            return jax.vmap(
+                lambda im, la, k: self._train_impl(params, im, la, k,
+                                                   epochs=epochs)
+            )(images, labels, keys)
+
+        self._train_cohort = jax.jit(cohort_impl,
+                                     static_argnames=("epochs",))
+
     def _loss(self, params, images, labels):
         logits, aux = self.model.apply(params, {"images": images},
                                        mode="train")
@@ -72,6 +81,18 @@ class LocalTrainer:
 
     def train(self, params, images, labels, key, epochs: int):
         return self._train(params, images, labels, key, epochs=int(epochs))
+
+    def train_cohort(self, params, images, labels, keys, epochs: int):
+        """Batched local training: ONE vmapped step over the cohort axis.
+
+        images: (C, S, ...), labels: (C, S), keys: (C,) per-worker PRNG
+        keys.  Returns params stacked over the cohort axis (C, ...) --
+        member i equals `train(params, images[i], labels[i], keys[i])` up
+        to vmap's reduction-order jitter (pinned by tests/test_cohort.py).
+        """
+        return self._train_cohort(params, jnp.asarray(images),
+                                  jnp.asarray(labels), keys,
+                                  epochs=int(epochs))
 
     def evaluate(self, params, images, labels) -> float:
         return float(self._eval(params, images, labels))

@@ -56,12 +56,14 @@ def decompress_tree(ctree):
                         is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
-def compressed_bytes(tree) -> int:
-    """Bytes on the wire for the compressed form (int8 + fp32 scales)."""
+def compressed_bytes(tree, *, block: int = 256) -> int:
+    """Bytes on the wire for the compressed form (int8 + fp32 scales).
+    `block` must match the `compress_tree(block=...)` the wire actually
+    uses -- the count was silently hardcoded to 256 before."""
     total = 0
     for leaf in jax.tree.leaves(tree):
         n = leaf.size
-        nblocks = -(-n // 256)
+        nblocks = -(-n // block)
         total += n + 4 * nblocks
     return total
 

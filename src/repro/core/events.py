@@ -59,7 +59,7 @@ class FLSimulation:
                  test_images, test_labels, *, t_per_sample_ref: float = 2e-3,
                  model_bytes: int = 0, round_overhead: float = 0.5,
                  idle_tick: float = 0.2, time_noise: float = 0.05,
-                 seed: int = 0):
+                 seed: int = 0, cohort: bool = True):
         self.server = server
         self.workers = workers
         self.test_images = test_images
@@ -71,6 +71,9 @@ class FLSimulation:
         self.noise = time_noise
         self.rng = np.random.default_rng(seed + 17)
         self.key = jax.random.key(seed)
+        # cohort=True trains same-shape worker groups in one vmapped step
+        # (client.LocalTrainer.train_cohort) instead of a Python loop.
+        self.cohort = cohort
         trainer = next(iter(workers.values())).trainer
         self._eval = lambda p: trainer.evaluate(p, test_images, test_labels)
 
@@ -87,6 +90,37 @@ class FLSimulation:
         self.key, k = jax.random.split(self.key)
         return k
 
+    # -- cohort training ----------------------------------------------
+    def _train_plan(self, params, plan: list[tuple[int, int, object]]
+                    ) -> dict[int, object]:
+        """Execute [(wid, epochs, key), ...] -> {wid: new_params}.
+
+        Workers whose shards share a shape (and epoch count and trainer)
+        train as ONE vmapped cohort step; stragglers of odd shape fall back
+        to the sequential path.  Keys were drawn per-worker in plan order,
+        so grouping does not perturb the RNG stream (determinism test)."""
+        groups: dict[tuple, list[tuple[int, object]]] = {}
+        for wid, epochs, key in plan:
+            w = self.workers[wid]
+            gk = (id(w.trainer), w.images.shape, epochs)
+            groups.setdefault(gk, []).append((wid, key))
+        out: dict[int, object] = {}
+        for (_, shape, epochs), members in groups.items():
+            if self.cohort and len(members) > 1 and shape[0] > 0:
+                from repro.core import federated
+                w0 = self.workers[members[0][0]]
+                shards = [(self.workers[m].images, self.workers[m].labels)
+                          for m, _ in members]
+                stacked = federated.cohort_train(
+                    w0.trainer, params, shards,
+                    [k for _, k in members], epochs)
+                for i, (m, _) in enumerate(members):
+                    out[m] = federated.island_slice(stacked, i)
+            else:
+                for m, key in members:
+                    out[m] = self.workers[m].local_train(params, key, epochs)
+        return out
+
     # -- synchronous ---------------------------------------------------
     def run_sync(self, rounds: int, *, max_time: float = np.inf,
                  target_acc: float = np.inf) -> SimResult:
@@ -101,18 +135,19 @@ class FLSimulation:
                 recs.append(SimRecord(t, acc, rnd, 0, srv.version))
                 srv.record_accuracy(acc)
                 continue
-            responses, finish = {}, 0.0
+            finish = 0.0
             budget = max(
                 srv.stats[w].t_one * srv.epochs_for(w) + srv.stats[w].t_transmit
                 for w in sel)
+            plan = []
             for wid in sel:
                 w = self.workers[wid]
                 epochs = srv.epochs_for(wid, budget)
                 dur, t_one, t_tx = self._duration(w, epochs)
-                responses[wid] = w.local_train(srv.params, self._next_key(),
-                                               epochs)
+                plan.append((wid, epochs, self._next_key()))
                 srv.stats[wid].observe(t_one, t_tx)
                 finish = max(finish, dur)
+            responses = self._train_plan(srv.params, plan)
             t += finish + self.round_overhead
             srv.sync_aggregate(responses, t)
             acc = self._eval(srv.params)

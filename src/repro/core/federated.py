@@ -49,6 +49,21 @@ def island_slice(tree, i: int):
     return jax.tree.map(lambda x: x[i], tree)
 
 
+def cohort_train(trainer, params, shards, keys, epochs: int):
+    """Train a whole cohort in ONE batched step instead of Python-looping
+    `local_train`: stack the worker shards along a leading cohort axis and
+    vmap the island-local trainer over it (`params` broadcast, exactly the
+    `stack_islands` layout).  Returns params stacked (C, ...) -- feed
+    straight into `fl_aggregate` / `hierarchy.hierarchical_sync_aggregate`.
+
+    shards: sequence of (images, labels) with EQUAL shapes (the caller
+    groups by shape; see events.FLSimulation._train_plan)."""
+    images = jnp.stack([jnp.asarray(x) for x, _ in shards])
+    labels = jnp.stack([jnp.asarray(y) for _, y in shards])
+    return trainer.train_cohort(params, images, labels, jnp.stack(keys),
+                                epochs)
+
+
 def fl_aggregate(stacked_params, mixing):
     """The FLight exchange: one mixing collective over the island axis.
     stacked_params: pytree with leading island axis sharded over "pod";

@@ -1,0 +1,245 @@
+"""Scalable FL scenario engine: churn / stragglers / non-IID drift /
+partial participation at 10^5+ simulated workers.
+
+The discrete-event engine (`core/events.py`) instantiates a SimWorker per
+worker and trains each one -- faithful, but capped at a few dozen workers.
+This engine splits the two things a federated simulation must produce:
+
+  * TIMING runs over the FULL population as vectorized numpy: per-worker
+    ground-truth times are arrays, a sync round is one masked max (the
+    straggler barrier), async is a finish-time heap seeded with the whole
+    participating set.  10^5 workers is a few array ops per round.
+  * QUALITY comes from really training a SAMPLED COHORT with the batched
+    vmap step (`client.LocalTrainer.train_cohort`) on freshly drawn
+    non-IID shards, folded through the edge->fog->cloud hierarchy
+    (`core.hierarchy`).  The cohort stands in for the round's selected set
+    the way a survey samples a population.
+
+Every random draw comes from seeded generators (numpy for the population,
+a split jax key chain for training), so two runs with the same config
+produce IDENTICAL SimRecord sequences -- pinned by tests/test_scenarios.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, federated, hierarchy
+from repro.core.client import LocalTrainer
+from repro.core.events import SimRecord, SimResult
+from repro.models import build_model
+from repro.models.config import ModelConfig
+
+_DEFAULT_MODEL = ModelConfig(name="scenario-mlp", family="cnn", num_layers=0,
+                             d_model=48, img_hw=28, img_c=1, n_classes=10,
+                             remat=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Knobs for one scenario.  All rates are per round (sync) or per
+    cohort-generation (async)."""
+    n_workers: int = 1000
+    cohort_size: int = 16          # workers actually trained per round
+    fog_cells: int = 4             # edge->fog->cloud cells over the cohort
+    participation: float = 0.1     # fraction of ALIVE workers selected
+    churn_leave: float = 0.0       # P(online worker drops) per round
+    churn_join: float = 0.0        # P(offline worker rejoins) per round
+    straggler_frac: float = 0.0    # fraction with a heavy-tail slowdown
+    straggler_slow: float = 8.0    # their multiplicative slowdown
+    drift: float = 0.0             # label-skew rotation speed (classes/round)
+    dirichlet_alpha: float = 100.0  # >=100 => IID; small => label-skewed
+    epochs: int = 1
+    samples_per_worker: int = 64
+    batch_size: int = 32
+    t_per_sample: float = 2e-3     # reference seconds per sample per epoch
+    round_overhead: float = 0.5
+    idle_tick: float = 0.2
+    async_base_alpha: float = 0.6
+    staleness_scheme: str = "polynomial"
+    seed: int = 0
+
+
+class ScenarioSim:
+    """Population-scale FL simulation (see module docstring).
+
+    run_sync / run_async mirror events.FLSimulation's API and return the
+    same SimResult record stream."""
+
+    def __init__(self, cfg: ScenarioConfig, *, model_cfg: ModelConfig = None,
+                 pool: int = 4096, eval_n: int = 512):
+        from repro.data.synthetic import make_classification_set
+        self.cfg = cfg
+        self.model = build_model(model_cfg or _DEFAULT_MODEL)
+        self.trainer = LocalTrainer(self.model, lr=0.05,
+                                    batch_size=cfg.batch_size)
+        self.pool_x, self.pool_y = make_classification_set(
+            "synmnist", pool, seed=cfg.seed + 1)
+        self.test_x, self.test_y = make_classification_set(
+            "synmnist", eval_n, seed=cfg.seed + 2)
+        self.n_classes = int(self.pool_y.max()) + 1
+        self._class_idx = [np.flatnonzero(self.pool_y == c)
+                           for c in range(self.n_classes)]
+
+        # -- full-population ground truth (vectorized) -------------------
+        n = cfg.n_workers
+        rng = np.random.default_rng(cfg.seed + 23)
+        speed = rng.lognormal(0.0, 0.25, n)
+        slow = np.where(rng.random(n) < cfg.straggler_frac,
+                        cfg.straggler_slow, 1.0)
+        self.t_one = cfg.t_per_sample * cfg.samples_per_worker * speed * slow
+        self.t_tx = rng.uniform(0.05, 0.3, n)
+        self.alive = np.ones(n, bool)
+        self.rng = np.random.default_rng(cfg.seed)     # selection + churn
+        self.key = jax.random.key(cfg.seed)
+
+    # -- helpers -----------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _churn(self):
+        c = self.cfg
+        if c.churn_leave > 0:
+            self.alive &= ~(self.rng.random(len(self.alive)) < c.churn_leave)
+        if c.churn_join > 0:
+            joins = self.rng.random(len(self.alive)) < c.churn_join
+            self.alive |= joins
+
+    def _select(self) -> np.ndarray:
+        alive_idx = np.flatnonzero(self.alive)
+        if alive_idx.size == 0:
+            return alive_idx
+        n_sel = max(1, int(round(self.cfg.participation * alive_idx.size)))
+        return np.sort(self.rng.choice(alive_idx, n_sel, replace=False))
+
+    def _label_props(self, wid: int) -> np.ndarray:
+        if self.cfg.dirichlet_alpha >= 100.0:
+            return np.full(self.n_classes, 1.0 / self.n_classes)
+        rw = np.random.default_rng((self.cfg.seed, 104729, int(wid)))
+        return rw.dirichlet([self.cfg.dirichlet_alpha] * self.n_classes)
+
+    def shard_for(self, wid: int, rnd: int):
+        """Worker `wid`'s private shard at round `rnd`: label proportions
+        are a per-worker Dirichlet draw rotated by the drift schedule, so a
+        non-stationary fleet keeps re-skewing as the simulation advances."""
+        shift = int(self.cfg.drift * rnd) % self.n_classes
+        props = np.roll(self._label_props(wid), shift)
+        rs = np.random.default_rng((self.cfg.seed, 7919, int(wid), shift))
+        counts = rs.multinomial(self.cfg.samples_per_worker, props)
+        idx = np.concatenate([
+            rs.choice(self._class_idx[c], k, replace=True)
+            for c, k in enumerate(counts) if k > 0])
+        rs.shuffle(idx)
+        return self.pool_x[idx], self.pool_y[idx]
+
+    def _train_cohort(self, params, cohort: np.ndarray, rnd: int):
+        """One vmapped batched step over the sampled cohort, folded
+        edge->fog->cloud.  Returns the new global params."""
+        shards = [self.shard_for(int(w), rnd) for w in cohort]
+        keys = [self._next_key() for _ in cohort]
+        stacked = federated.cohort_train(self.trainer, params, shards, keys,
+                                         self.cfg.epochs)
+        weights = np.full(len(cohort), float(self.cfg.samples_per_worker))
+        cell_of = np.asarray(cohort) % max(1, self.cfg.fog_cells)
+        folded = hierarchy.hierarchical_sync_aggregate(stacked, weights,
+                                                       cell_of)
+        return federated.island_slice(folded, 0)
+
+    def _eval(self, params) -> float:
+        return self.trainer.evaluate(params, self.test_x, self.test_y)
+
+    # -- synchronous -------------------------------------------------------
+    def run_sync(self, rounds: int, *, max_time: float = np.inf) -> SimResult:
+        c = self.cfg
+        params = self.model.init(jax.random.key(c.seed))
+        t = 0.0
+        recs = [SimRecord(0.0, self._eval(params), 0, 0, 0)]
+        version = 0
+        for rnd in range(1, rounds + 1):
+            self._churn()
+            sel = self._select()
+            if sel.size == 0:
+                t += c.idle_tick
+                recs.append(SimRecord(t, recs[-1].acc, rnd, 0, version))
+                continue
+            # straggler barrier over the FULL selected set (vectorized)
+            t += float((self.t_one[sel] * c.epochs + self.t_tx[sel]).max()) \
+                + c.round_overhead
+            cohort = np.sort(self.rng.choice(
+                sel, min(c.cohort_size, sel.size), replace=False))
+            params = self._train_cohort(params, cohort, rnd)
+            version += 1
+            recs.append(SimRecord(t, self._eval(params), rnd, int(sel.size),
+                                  version))
+            if t >= max_time:
+                break
+        return SimResult(recs, params)
+
+    # -- asynchronous ------------------------------------------------------
+    def run_async(self, max_merges: int, *, max_time: float = np.inf
+                  ) -> SimResult:
+        c = self.cfg
+        params = self.model.init(jax.random.key(c.seed))
+        t = 0.0
+        recs = [SimRecord(0.0, self._eval(params), 0, 0, 0)]
+        version = 0
+
+        sel = self._select()
+        if sel.size == 0:
+            return SimResult(recs, params)
+        finish = t + self.t_one[sel] * c.epochs + self.t_tx[sel]
+        heap = [(float(f), i, int(w)) for i, (f, w) in
+                enumerate(zip(finish, sel))]
+        heapq.heapify(heap)
+        seq = len(heap)
+
+        # quality: a trained generation of cohort members, folded one per
+        # merge with staleness-decayed alpha (the events.py async semantics
+        # at population scale)
+        member_queue: list = []
+        base_version = 0
+
+        def refill(rnd: int):
+            nonlocal member_queue, base_version
+            alive_idx = np.flatnonzero(self.alive)
+            if alive_idx.size == 0:
+                return
+            cohort = np.sort(self.rng.choice(
+                alive_idx, min(c.cohort_size, alive_idx.size), replace=False))
+            shards = [self.shard_for(int(w), rnd) for w in cohort]
+            keys = [self._next_key() for _ in cohort]
+            stacked = federated.cohort_train(self.trainer, params, shards,
+                                             keys, c.epochs)
+            member_queue = [federated.island_slice(stacked, i)
+                            for i in range(len(cohort))]
+            base_version = version
+
+        merges = 0
+        while merges < max_merges and t < max_time and heap:
+            t_fin, _, wid = heapq.heappop(heap)
+            t = max(t, t_fin)
+            if not member_queue:
+                self._churn()
+                refill(merges)
+                if not member_queue:
+                    t += c.idle_tick
+                    continue
+            w_params = member_queue.pop(0)
+            alpha = aggregation.staleness_alpha(
+                c.async_base_alpha, version - base_version,
+                scheme=c.staleness_scheme)
+            params = aggregation.async_merge(params, w_params, alpha)
+            version += 1
+            merges += 1
+            recs.append(SimRecord(t, self._eval(params), merges, 1, version))
+            if self.alive[wid]:
+                heapq.heappush(
+                    heap, (t + float(self.t_one[wid] * c.epochs
+                                     + self.t_tx[wid]), seq, wid))
+                seq += 1
+        return SimResult(recs, params)

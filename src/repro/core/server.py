@@ -31,10 +31,14 @@ class AggregationServer:
     """Holds the server model + policy state; pure-python control plane."""
 
     def __init__(self, params, stats: dict[int, WorkerStats],
-                 cfg: ServerConfig, *, seed: int = 0):
+                 cfg: ServerConfig, *, seed: int = 0, topology=None):
         self.params = params
         self.stats = stats
         self.cfg = cfg
+        # Optional hierarchy.FogTopology: sync rounds then aggregate
+        # edge->fog->cloud instead of flat (numerically equivalent for
+        # matching weights; see core/hierarchy.py).
+        self.topology = topology
         self.version = 0
         self.acc_history: list[float] = [0.0]
         self.rng = np.random.default_rng(seed)
@@ -81,8 +85,14 @@ class AggregationServer:
             self.cfg.aggregation,
             [max(self.stats[i].n_data, 1) for i in wids],
             staleness=[0.0] * len(wids))
+        avg = None
+        if self.topology is not None:
+            from repro.core import hierarchy
+            avg = hierarchy.fog_aggregate_responses(
+                responses, dict(zip(wids, w)), self.topology)
         self.params, self._sopt_state = self._sopt.apply(
-            self.params, [responses[i] for i in wids], w, self._sopt_state)
+            self.params, [responses[i] for i in wids], w, self._sopt_state,
+            avg=avg)
         for i in wids:
             self.stats[i].last_contribution = sim_time
         self.version += 1

@@ -44,10 +44,13 @@ class ServerOptimizer:
         return ServerOptState(momentum=z(), variance=z())
 
     def apply(self, server_params, worker_params_list, weights,
-              state: ServerOptState):
+              state: ServerOptState, *, avg=None):
         """-> (new_server_params, new_state).  worker list is the selected
-        responses; weights as in aggregation.aggregation_weights."""
-        avg = aggregation.weighted_average(worker_params_list, weights)
+        responses; weights as in aggregation.aggregation_weights.  `avg`
+        short-circuits the flat weighted average when the caller already
+        aggregated (e.g. through the edge->fog->cloud tier)."""
+        if avg is None:
+            avg = aggregation.weighted_average(worker_params_list, weights)
         if self.method == "avg":
             return avg, state
 

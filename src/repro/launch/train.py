@@ -44,6 +44,10 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress", action="store_true",
                     help="int8 delta compression on the exchange")
+    ap.add_argument("--fog-cells", type=int, default=1,
+                    help="two-tier exchange: islands aggregate within fog "
+                         "cells, then across cells (== flat for matching "
+                         "weights; core/hierarchy.py)")
     ap.add_argument("--straggler-slack", type=float, default=3.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -97,14 +101,27 @@ def main(argv=None):
         loss = np.asarray(metrics["loss"]).mean()
         if (s + 1) % args.local_steps == 0 and P > 1:
             sel = clock.selection(args.straggler_slack)
-            M = jnp.asarray(fed.selection_mixing(n_data / n_data.sum(), sel),
-                            jnp.float32)
-            if args.compress:
-                params = agg(params, base_params, M)
+            if args.fog_cells > 1:
+                # edge->fog->cloud: two narrow mixing hops instead of one
+                # P-wide collective (identical result; tests/test_hierarchy)
+                from repro.core import hierarchy
+                w = (n_data / n_data.sum()) * sel
+                if w.sum() > 0:        # nobody selected -> no exchange
+                    cell_of = np.arange(P) % args.fog_cells
+                    params = hierarchy.hierarchical_sync_aggregate(
+                        params, w, cell_of)
+                    base_params = jax.tree.map(lambda x: x, params)
+                tag = f"fog-exchange x{args.fog_cells}"
             else:
-                params = agg(params, M)
-            base_params = jax.tree.map(lambda x: x, params)
-            tag = "exchange" + ("+int8" if args.compress else "")
+                M = jnp.asarray(
+                    fed.selection_mixing(n_data / n_data.sum(), sel),
+                    jnp.float32)
+                if args.compress:
+                    params = agg(params, base_params, M)
+                else:
+                    params = agg(params, M)
+                base_params = jax.tree.map(lambda x: x, params)
+                tag = "exchange" + ("+int8" if args.compress else "")
         else:
             tag = "local"
         print(f"[train] step={s+1} loss={loss:.4f} {dt*1e3:.0f}ms {tag}",

@@ -14,15 +14,16 @@ settings.register_profile("fast", max_examples=20, deadline=None)
 settings.load_profile("fast")
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
-def test_quant_error_bound(seed, n):
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000),
+       st.sampled_from([32, 64, 256, 500]))
+def test_quant_error_bound(seed, n, block):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.1, 10), jnp.float32)
-    q, s = comp.quantize_blockwise(x, block=256)
+    q, s = comp.quantize_blockwise(x, block=block)
     deq = comp.dequantize_blockwise(q, s, x.shape)
-    # per-block error <= scale/2 = amax/254
+    # per-block error <= scale/2 per element
     err = np.abs(np.asarray(deq - x))
-    scales = np.repeat(np.asarray(s), 256)[: n]
+    scales = np.repeat(np.asarray(s), block)[: n]
     assert np.all(err <= scales / 2 + 1e-7)
 
 
@@ -38,6 +39,27 @@ def test_compressed_bytes_smaller():
     t = {"w": jnp.ones((1024, 64), jnp.float32)}
     raw = 1024 * 64 * 4
     assert comp.compressed_bytes(t) < raw / 3
+
+
+def test_compressed_bytes_matches_compress_tree_block():
+    """The byte count must agree with the actual compressed form at a
+    NON-default block size (it used to hardcode 256)."""
+    t = {"w": jnp.ones((300, 7), jnp.float32), "b": jnp.ones((5,))}
+    for block in (32, 64, 100, 256):
+        c = comp.compress_tree(t, block=block)
+        actual = sum(d["q"].size + 4 * d["scale"].size
+                     for d in jax.tree.leaves(
+                         c, is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+        # compressed_bytes counts n payload int8 bytes (not the pad) plus
+        # 4 bytes per block scale
+        n = sum(leaf.size for leaf in jax.tree.leaves(t))
+        nblocks = sum(d["scale"].size for d in jax.tree.leaves(
+            c, is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+        assert comp.compressed_bytes(t, block=block) == n + 4 * nblocks
+        assert comp.compressed_bytes(t, block=block) <= actual
+    # different blocks really change the count
+    assert comp.compressed_bytes(t, block=32) > \
+        comp.compressed_bytes(t, block=256)
 
 
 def test_error_feedback_unbiased_over_rounds():
@@ -59,3 +81,34 @@ def test_error_feedback_unbiased_over_rounds():
     np.testing.assert_allclose(total_sent + np.asarray(ef.residual["w"]),
                                total_true, atol=1e-4)
     assert resid.max() < 0.01  # residual stays bounded (no drift)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(5, 25),
+       st.sampled_from([64, 256, 300]))
+def test_error_feedback_converges_property(seed, rounds, block):
+    """Property form: for any seed/round-count/block, the cumulative
+    TRANSMITTED delta equals the cumulative true delta up to the current
+    residual, and the residual is bounded by one quantisation step."""
+    rng = np.random.default_rng(seed)
+    n = 192
+    like = {"w": jnp.zeros((n,), jnp.float32)}
+    ef = comp.ErrorFeedback(like)
+    total_true = np.zeros(n)
+    total_sent = np.zeros(n)
+    max_step = 0.0
+    for _ in range(rounds):
+        delta = {"w": jnp.asarray(rng.normal(size=n) * 0.02, jnp.float32)}
+        ctree = ef.compress(delta, block=block)
+        sent = comp.decompress_tree(jax.tree.map(
+            lambda d: dict(d, dtype="float32"), ctree,
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+        total_true += np.asarray(delta["w"])
+        total_sent += np.asarray(sent["w"])
+        max_step = max(max_step, float(np.max(np.asarray(
+            ctree["w"]["scale"]))))
+    resid = np.asarray(ef.residual["w"])
+    # exact bookkeeping identity: sent + residual == true (fp32 rounding)
+    np.testing.assert_allclose(total_sent + resid, total_true,
+                               atol=1e-4 * rounds)
+    # residual never exceeds half of the largest quantisation step seen
+    assert np.abs(resid).max() <= max_step / 2 + 1e-6

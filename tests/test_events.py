@@ -60,6 +60,23 @@ def test_sync_deterministic(synmnist, synmnist_test):
         [(b.time, b.acc) for b in r2.records]
 
 
+def test_same_seed_identical_simrecords_sync_and_async(synmnist,
+                                                       synmnist_test):
+    """Full SimRecord-sequence equality (every field), both engines.
+    Guards the async heap's `seq` tie-break and the RNG threading through
+    the vmapped cohort path (keys are drawn per worker in plan order)."""
+    s1 = make_sim(synmnist, synmnist_test, n_workers=5, seed=9,
+                  batches=[2] * 5).run_sync(rounds=4)
+    s2 = make_sim(synmnist, synmnist_test, n_workers=5, seed=9,
+                  batches=[2] * 5).run_sync(rounds=4)
+    assert s1.records == s2.records
+    a1 = make_sim(synmnist, synmnist_test, n_workers=5, mode="async", seed=9,
+                  batches=[2] * 5).run_async(max_merges=10)
+    a2 = make_sim(synmnist, synmnist_test, n_workers=5, mode="async", seed=9,
+                  batches=[2] * 5).run_async(max_merges=10)
+    assert a1.records == a2.records
+
+
 def test_async_learns_and_merges_one_at_a_time(synmnist, synmnist_test):
     sim = make_sim(synmnist, synmnist_test, mode="async")
     res = sim.run_async(max_merges=48)

@@ -1,0 +1,138 @@
+"""Proof-by-test that edge->fog->cloud aggregation == flat aggregation.
+
+The whole point of the fog tier is that it is a pure scaling move: for
+matching weights the two-tier composition must match the single flat
+`fl_aggregate` (sync FedAvg) and the staleness-weighted async fold, to
+<= 1e-5.  These tests pin that identity at the matrix level, the pytree
+level, and end-to-end through the discrete-event simulator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, federated, hierarchy
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def random_stacked(P, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(P, 6, 5)), dtype),
+        "b": jnp.asarray(rng.normal(size=(P, 7)), dtype),
+    }
+
+
+def random_weights_cells(P, K, seed=0):
+    rng = np.random.default_rng(seed + 100)
+    weights = rng.uniform(0.1, 5.0, P)
+    cell_of = rng.integers(0, K, P)
+    cell_of[:K] = np.arange(K)  # every cell non-empty
+    return weights, cell_of
+
+
+# -- matrix level ----------------------------------------------------------
+
+@pytest.mark.parametrize("P,K", [(6, 1), (6, 2), (8, 3), (12, 12), (5, 4)])
+def test_matrix_composition_equals_flat(P, K):
+    weights, cell_of = random_weights_cells(P, K, seed=P * 31 + K)
+    edge = hierarchy.edge_mixing_matrix(weights, cell_of)
+    cloud = hierarchy.cloud_mixing_matrix(weights, cell_of)
+    flat = hierarchy.flat_mixing_matrix(weights)
+    # both stages are row-stochastic
+    np.testing.assert_allclose(edge.sum(axis=1), 1.0, **TOL)
+    np.testing.assert_allclose(cloud.sum(axis=1), 1.0, **TOL)
+    # and their composition IS the flat mixing
+    np.testing.assert_allclose(cloud @ edge, flat, **TOL)
+
+
+def test_edge_matrix_is_block_diagonal():
+    weights, cell_of = random_weights_cells(8, 3, seed=1)
+    edge = hierarchy.edge_mixing_matrix(weights, cell_of)
+    for i in range(8):
+        for j in range(8):
+            if cell_of[i] != cell_of[j]:
+                assert edge[i, j] == 0.0
+
+
+# -- pytree level (fl_aggregate two hops) ----------------------------------
+
+@pytest.mark.parametrize("P,K", [(6, 2), (9, 3), (7, 7), (6, 1)])
+def test_hierarchical_sync_aggregate_equals_flat(P, K):
+    stacked = random_stacked(P, seed=P + K)
+    weights, cell_of = random_weights_cells(P, K, seed=P + K)
+    flat = federated.fl_aggregate(
+        stacked, jnp.asarray(hierarchy.flat_mixing_matrix(weights),
+                             jnp.float32))
+    hier = hierarchy.hierarchical_sync_aggregate(stacked, weights, cell_of)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+@pytest.mark.parametrize("P,K", [(6, 2), (8, 4)])
+def test_hierarchical_async_aggregate_equals_flat(P, K):
+    """The staleness-weighted case: island i keeps (1 - a_i) of itself and
+    takes a_i of the contributor mix; contributions fold through the fog
+    tier first."""
+    stacked = random_stacked(P, seed=17 + P)
+    rng = np.random.default_rng(5 + P)
+    alphas = rng.uniform(0.0, 0.9, P)
+    contributors = rng.uniform(0.0, 2.0, P)
+    contributors[rng.integers(0, P)] = 0.0       # someone contributed nothing
+    _, cell_of = random_weights_cells(P, K, seed=3 + P)
+    flat = federated.fl_aggregate(
+        stacked, jnp.asarray(
+            aggregation.async_mixing_matrix(alphas, contributors),
+            jnp.float32))
+    hier = hierarchy.hierarchical_async_aggregate(stacked, alphas,
+                                                  contributors, cell_of)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# -- dict level (Tier A responses) ----------------------------------------
+
+def test_fog_aggregate_responses_equals_flat():
+    rng = np.random.default_rng(0)
+    wids = [3, 5, 9, 11, 20, 21]
+    responses = {w: {"p": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+                 for w in wids}
+    weights = {w: float(rng.uniform(0.5, 3.0)) for w in wids}
+    topo = hierarchy.FogTopology.round_robin(wids, 2)
+    hier = hierarchy.fog_aggregate_responses(responses, weights, topo)
+    wn = np.array([weights[w] for w in wids])
+    flat = aggregation.weighted_average([responses[w] for w in wids],
+                                        wn / wn.sum())
+    np.testing.assert_allclose(np.asarray(hier["p"]), np.asarray(flat["p"]),
+                               **TOL)
+
+
+def test_fog_topology_helpers():
+    topo = hierarchy.FogTopology.round_robin(range(10), 3)
+    assert topo.n_cells == 3
+    cells = topo.cells()
+    assert sorted(sum(cells.values(), [])) == list(range(10))
+    sub = topo.restrict([0, 1, 2])
+    assert set(sub.cell_of) == {0, 1, 2}
+    rand = hierarchy.FogTopology.random(range(10), 3, seed=1)
+    assert set(rand.cell_of) == set(range(10))
+    assert 1 <= rand.n_cells <= 3
+
+
+# -- end-to-end through the simulator --------------------------------------
+
+def test_sim_with_fog_topology_matches_flat(synmnist, synmnist_test):
+    from test_events import make_sim
+    flat = make_sim(synmnist, synmnist_test, n_workers=4).run_sync(rounds=3)
+    sim = make_sim(synmnist, synmnist_test, n_workers=4)
+    sim.server.topology = hierarchy.FogTopology.round_robin(
+        sim.workers.keys(), 2)
+    fog = sim.run_sync(rounds=3)
+    assert [r.time for r in flat.records] == [r.time for r in fog.records]
+    np.testing.assert_allclose([r.acc for r in flat.records],
+                               [r.acc for r in fog.records], atol=1e-3)
+    for a, b in zip(jax.tree.leaves(flat.final_params),
+                    jax.tree.leaves(fog.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,153 @@
+"""Scenario engine tests: determinism, churn / straggler / drift /
+participation semantics at small scale (tier-1), and the 10^5-worker
+suite under explicit wall-clock bounds (`scale` marker, separate CI job).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.scenarios import ScenarioConfig, ScenarioSim
+
+BASE = dict(n_workers=256, cohort_size=8, participation=0.25, epochs=1,
+            samples_per_worker=64, seed=7)
+
+
+def records_tuple(result):
+    return [(r.time, r.acc, r.round, r.n_selected, r.version)
+            for r in result.records]
+
+
+# -- determinism -----------------------------------------------------------
+
+def test_sync_deterministic_records():
+    cfg = ScenarioConfig(**BASE, churn_leave=0.05, churn_join=0.05,
+                         straggler_frac=0.1, drift=0.4, dirichlet_alpha=0.5)
+    r1 = ScenarioSim(cfg).run_sync(4)
+    r2 = ScenarioSim(cfg).run_sync(4)
+    assert records_tuple(r1) == records_tuple(r2)
+
+
+def test_async_deterministic_records():
+    cfg = ScenarioConfig(**BASE, churn_leave=0.05, churn_join=0.05,
+                         straggler_frac=0.1, drift=0.4, dirichlet_alpha=0.5)
+    r1 = ScenarioSim(cfg).run_async(16)
+    r2 = ScenarioSim(cfg).run_async(16)
+    assert records_tuple(r1) == records_tuple(r2)
+
+
+# -- scenario semantics ----------------------------------------------------
+
+def test_partial_participation_counts():
+    cfg = ScenarioConfig(**BASE)
+    r = ScenarioSim(cfg).run_sync(3)
+    expect = int(round(0.25 * 256))
+    assert all(rec.n_selected == expect for rec in r.records[1:])
+
+
+def test_churn_shrinks_and_recovers_fleet():
+    leave_only = ScenarioConfig(**{**BASE, "seed": 11}, churn_leave=0.3)
+    sim = ScenarioSim(leave_only)
+    r = sim.run_sync(5)
+    n_sel = [rec.n_selected for rec in r.records[1:]]
+    assert n_sel[-1] < n_sel[0]          # fleet bleeds out
+    assert sim.alive.sum() < 256
+    balanced = ScenarioConfig(**{**BASE, "seed": 11}, churn_leave=0.3,
+                              churn_join=0.3)
+    sim2 = ScenarioSim(balanced)
+    sim2.run_sync(5)
+    assert sim2.alive.sum() > sim.alive.sum()
+
+
+def test_stragglers_stretch_round_time():
+    fast = ScenarioSim(ScenarioConfig(**BASE)).run_sync(3)
+    slow = ScenarioSim(ScenarioConfig(**BASE, straggler_frac=0.2,
+                                      straggler_slow=10.0)).run_sync(3)
+    assert slow.records[-1].time > 2 * fast.records[-1].time
+
+
+def test_non_iid_drift_rotates_label_skew():
+    cfg = ScenarioConfig(**BASE, dirichlet_alpha=0.3, drift=1.0)
+    sim = ScenarioSim(cfg)
+    _, y0 = sim.shard_for(3, 0)
+    _, y5 = sim.shard_for(3, 5)
+    h0 = np.bincount(y0, minlength=10) / len(y0)
+    h5 = np.bincount(y5, minlength=10) / len(y5)
+    # skewed (far from uniform) and drifting (distribution moved)
+    assert np.abs(h0 - 0.1).max() > 0.1
+    assert np.abs(h0 - h5).max() > 0.1
+    # drift=1.0 is exactly a 5-class rotation after 5 rounds
+    np.testing.assert_allclose(np.roll(
+        np.bincount(sim.shard_for(3, 0)[1], minlength=10), 5),
+        np.bincount(sim.shard_for(3, 5)[1], minlength=10), atol=len(y0) * 0.2)
+
+
+def test_sync_learns_iid():
+    cfg = ScenarioConfig(n_workers=256, cohort_size=16, participation=0.5,
+                         epochs=2, samples_per_worker=128, seed=0)
+    r = ScenarioSim(cfg).run_sync(10)
+    assert r.best_acc > 0.5
+    times = [rec.time for rec in r.records]
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+def test_async_learns_iid():
+    cfg = ScenarioConfig(n_workers=256, cohort_size=16, participation=0.5,
+                         epochs=2, samples_per_worker=128, seed=0)
+    r = ScenarioSim(cfg).run_async(120)
+    assert r.best_acc > 0.35
+    assert all(rec.n_selected <= 1 for rec in r.records[1:])
+
+
+def test_fog_cells_match_single_cell():
+    one = ScenarioSim(ScenarioConfig(**BASE, fog_cells=1)).run_sync(3)
+    four = ScenarioSim(ScenarioConfig(**BASE, fog_cells=4)).run_sync(3)
+    np.testing.assert_allclose([r.acc for r in one.records],
+                               [r.acc for r in four.records], atol=1e-3)
+    assert [r.time for r in one.records] == [r.time for r in four.records]
+
+
+# -- the 10^5 suite (scale marker: separate CI job, wall-clock bounded) ----
+
+SCALE = dict(n_workers=100_000, cohort_size=16, participation=0.05,
+             churn_leave=0.02, churn_join=0.02, straggler_frac=0.05,
+             straggler_slow=8.0, drift=0.3, dirichlet_alpha=0.5,
+             epochs=1, samples_per_worker=64, seed=1)
+SYNC_BOUND_S = 90.0
+ASYNC_BOUND_S = 90.0
+
+
+@pytest.mark.scale
+def test_scale_sync_churn_straggler_noniid_under_bound():
+    t0 = time.monotonic()
+    sim = ScenarioSim(ScenarioConfig(**SCALE))
+    r = sim.run_sync(5)
+    wall = time.monotonic() - t0
+    assert wall < SYNC_BOUND_S, f"10^5 sync scenario took {wall:.1f}s"
+    # full population timing: ~5% of 10^5 selected each round
+    assert all(3500 < rec.n_selected < 6500 for rec in r.records[1:])
+    # stragglers set the barrier: round time >> fastest worker's time
+    assert r.records[1].time > float(np.min(sim.t_one))
+    assert r.best_acc > 0.1  # quality is live, not a stub
+    times = [rec.time for rec in r.records]
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+@pytest.mark.scale
+def test_scale_async_churn_straggler_noniid_under_bound():
+    t0 = time.monotonic()
+    r = ScenarioSim(ScenarioConfig(**SCALE)).run_async(64)
+    wall = time.monotonic() - t0
+    assert wall < ASYNC_BOUND_S, f"10^5 async scenario took {wall:.1f}s"
+    assert len(r.records) == 65
+    assert r.best_acc > 0.1
+    times = [rec.time for rec in r.records]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+@pytest.mark.scale
+def test_scale_deterministic():
+    cfg = ScenarioConfig(**{**SCALE, "seed": 2})
+    r1 = ScenarioSim(cfg).run_sync(3)
+    r2 = ScenarioSim(cfg).run_sync(3)
+    assert records_tuple(r1) == records_tuple(r2)

@@ -1,0 +1,85 @@
+"""Edge cases: SimResult accessors and mixing-matrix normalisation
+invariants (`selection_mixing` / `async_mixing`)."""
+import numpy as np
+
+from repro.core import federated
+from repro.core.events import SimRecord, SimResult
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+# -- SimResult -------------------------------------------------------------
+
+def test_simresult_empty_records():
+    r = SimResult([])
+    assert r.time_to_accuracy(0.5) == float("inf")
+    assert r.best_acc == 0.0
+    t, a = r.as_arrays()
+    assert t.size == 0 and a.size == 0
+
+
+def test_simresult_target_never_reached():
+    recs = [SimRecord(float(i), 0.1 * i, i, 1, i) for i in range(4)]
+    r = SimResult(recs)
+    assert r.time_to_accuracy(0.99) == float("inf")
+    assert abs(r.best_acc - 0.3) < 1e-12
+
+
+def test_simresult_target_reached_at_first_crossing():
+    recs = [SimRecord(0.0, 0.0, 0, 0, 0), SimRecord(1.5, 0.6, 1, 2, 1),
+            SimRecord(2.5, 0.4, 2, 2, 2), SimRecord(3.5, 0.8, 3, 2, 3)]
+    r = SimResult(recs)
+    assert r.time_to_accuracy(0.5) == 1.5       # first crossing, not best
+    assert r.time_to_accuracy(0.7) == 3.5
+    assert r.best_acc == 0.8
+
+
+# -- selection_mixing ------------------------------------------------------
+
+@given(st.integers(2, 12), st.integers(0, 2**31 - 1))
+def test_selection_mixing_rows_normalised(P, seed):
+    rng = np.random.default_rng(seed)
+    weights = rng.uniform(0.0, 3.0, P)
+    selected = (rng.random(P) < 0.6).astype(float)
+    M = federated.selection_mixing(weights, selected)
+    np.testing.assert_allclose(M.sum(axis=1), 1.0, atol=1e-9)
+    assert np.all(M >= 0)
+    # unselected islands contribute nothing but still receive the mix
+    if (weights * selected).sum() > 0:
+        for j in np.flatnonzero((weights * selected) == 0):
+            assert np.all(M[:, j] == 0.0)
+
+
+def test_selection_mixing_nobody_selected_is_identity():
+    M = federated.selection_mixing(np.ones(4), np.zeros(4))
+    np.testing.assert_allclose(M, np.eye(4))
+
+
+def test_selection_mixing_weight_proportionality():
+    M = federated.selection_mixing(np.array([1.0, 3.0]), np.ones(2))
+    np.testing.assert_allclose(M, [[0.25, 0.75], [0.25, 0.75]])
+
+
+# -- async_mixing ----------------------------------------------------------
+
+@given(st.integers(2, 12), st.integers(0, 2**31 - 1))
+def test_async_mixing_rows_normalised(P, seed):
+    rng = np.random.default_rng(seed)
+    alphas = rng.uniform(0.0, 1.0, P)
+    contributors = rng.uniform(0.0, 2.0, P)
+    contributors[int(rng.integers(P))] = 1.0    # at least one contributor
+    M = federated.async_mixing(alphas, contributors)
+    np.testing.assert_allclose(M.sum(axis=1), 1.0, atol=1e-9)
+    assert np.all(M >= -1e-12)
+
+
+def test_async_mixing_zero_alpha_keeps_island_fixed():
+    M = federated.async_mixing(np.array([0.0, 0.5]), np.array([0.0, 1.0]))
+    np.testing.assert_allclose(M[0], [1.0, 0.0])   # alpha=0: row = identity
+    np.testing.assert_allclose(M[1], [0.0, 1.0])   # full take of contributor
