@@ -1,0 +1,210 @@
+"""Compressed weight-exchange benchmark -> BENCH_exchange.json (the perf
+trajectory for the cross-island collective; run by the `scale` CI job).
+
+Measures, per island count and compression mode (f32 / q8 / topk /
+q8_topk), the bytes-on-wire of one exchange round and the wall time of
+the jitted mixing collective (`launch/steps.make_fl_aggregate`) on a
+mixed-shape, mixed-dtype parameter tree.  Also records the parity of the
+Pallas (kernels/quant8, interpret off-TPU) quantised exchange against the
+jnp reference -- the acceptance bound is 1e-2 max-abs.
+
+  PYTHONPATH=src python benchmarks/fl_exchange.py          # measure + write
+  PYTHONPATH=src python benchmarks/fl_exchange.py --check  # compare-or-commit:
+      writes BENCH_exchange.json if missing, else fails (exit 1) when any
+      mode got > REGRESSION_FACTOR x slower or puts MORE bytes on the wire
+      than committed.  The structural invariants (q8 >= 3.5x smaller than
+      f32, q8_topk strictly smaller than q8, parity <= 1e-2) are enforced
+      on every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.core import compression as comp                   # noqa: E402
+from repro.core import federated as fed                      # noqa: E402
+from repro.launch.steps import make_fl_aggregate             # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_exchange.json")
+REGRESSION_FACTOR = 3.0   # fail --check when > 3x slower than committed
+MODES = ("f32", "q8", "topk", "q8_topk")
+ISLANDS = (2, 4, 8)
+K_FRAC = 0.05
+ROUNDS = 10
+PARITY_BOUND = 1e-2
+
+# wire accounting per mode: q8 rides the sharding-preserving rowwise
+# layout (the exchange's actual form); the topk modes are counted in
+# wire form (int32 idx + fp32 val, resp. idx + block-padded int8)
+_BYTES_MODE = {"f32": "none", "q8": "q8_rowwise", "topk": "topk",
+               "q8_topk": "q8_topk"}
+
+
+def make_tree(P: int, seed: int = 0):
+    """Mixed params: 2-D matmul weights, an embedding table, a
+    non-block-multiple bias, and a bf16 norm leaf; stacked over P islands
+    with small per-island deltas from a shared base."""
+    rng = np.random.default_rng(seed)
+    one = {
+        "embed": jnp.asarray(rng.normal(size=(512, 256)), jnp.float32),
+        "w1": jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(1024, 256)), jnp.float32),
+        "bias": jnp.asarray(rng.normal(size=(1027,)), jnp.float32),
+        "ln": jnp.asarray(rng.normal(size=(256,)), jnp.bfloat16),
+    }
+    base = fed.stack_islands(one, P)
+    stacked = jax.tree.map(
+        lambda x: (x.astype(jnp.float32)
+                   + jnp.asarray(rng.normal(size=x.shape) * 0.01,
+                                 jnp.float32)).astype(x.dtype), base)
+    return stacked, base
+
+
+def wire_bytes(tree, mode: str) -> int:
+    return comp.compressed_bytes(tree, mode=_BYTES_MODE[mode],
+                                 k_frac=K_FRAC)
+
+
+def _time_exchange(fn, args) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(ROUNDS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / ROUNDS * 1e3   # ms/round
+
+
+def measure_parity(P: int = 4) -> dict:
+    """Fused (Pallas, interpret off-TPU) vs jnp-reference exchange on the
+    mixed tree -- the quantisation rounding must agree."""
+    stacked, base = make_tree(P, seed=7)
+    M = jnp.asarray(fed.selection_mixing(np.full(P, 1.0 / P), np.ones(P)),
+                    jnp.float32)
+    out = {}
+    for mode in ("q8", "q8_topk"):
+        ref = fed.fl_aggregate_compressed(stacked, base, M, mode=mode,
+                                          k_frac=K_FRAC, impl="ref")
+        pal = fed.fl_aggregate_compressed(stacked, base, M, mode=mode,
+                                          k_frac=K_FRAC, impl="pallas")
+        err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                        - b.astype(jnp.float32))))
+                  for a, b in zip(jax.tree.leaves(ref),
+                                  jax.tree.leaves(pal)))
+        out[f"{mode}_pallas_vs_ref_max_abs"] = err
+    return out
+
+
+def run_all() -> dict:
+    cells = {}
+    for P in ISLANDS:
+        stacked, base = make_tree(P)
+        M = jnp.asarray(fed.selection_mixing(np.full(P, 1.0 / P),
+                                             np.ones(P)), jnp.float32)
+        f32_bytes = wire_bytes(stacked, "f32")
+        for mode in MODES:
+            fn = jax.jit(make_fl_aggregate(
+                compress=False if mode == "f32" else mode, k_frac=K_FRAC))
+            args = (stacked, M) if mode == "f32" else (stacked, base, M)
+            ms = _time_exchange(fn, args)
+            wb = wire_bytes(stacked, mode)
+            cells[f"P{P}_{mode}"] = {
+                "islands": P, "mode": mode,
+                "wire_mb_per_round": round(wb / 1e6, 4),
+                "reduction_vs_f32": round(f32_bytes / wb, 2),
+                "exchange_ms": round(ms, 3),
+            }
+            print(f"[fl_exchange] P={P} {mode:8s} "
+                  f"{wb/1e6:8.3f} MB/round ({f32_bytes/wb:5.2f}x vs f32) "
+                  f"{ms:7.3f} ms", flush=True)
+    parity = measure_parity()
+    for k, v in parity.items():
+        print(f"[fl_exchange] parity {k} = {v:.3e}")
+    n_one = sum(int(np.prod(x.shape)) for x in
+                jax.tree.leaves(make_tree(1)[0]))
+    return {
+        "bench": "fl_exchange",
+        "k_frac": K_FRAC,
+        "params_per_island": n_one,
+        "cells": cells,
+        "parity": {k: float(f"{v:.3e}") for k, v in parity.items()},
+    }
+
+
+def check_invariants(result: dict) -> list[str]:
+    bad = []
+    for P in ISLANDS:
+        q8 = result["cells"][f"P{P}_q8"]
+        qtk = result["cells"][f"P{P}_q8_topk"]
+        if q8["reduction_vs_f32"] < 3.5:
+            bad.append(f"P{P}: q8 reduction {q8['reduction_vs_f32']} < 3.5x")
+        if not qtk["wire_mb_per_round"] < q8["wire_mb_per_round"]:
+            bad.append(f"P{P}: q8_topk bytes not < q8 bytes")
+    for k, v in result["parity"].items():
+        if v > PARITY_BOUND:
+            bad.append(f"parity {k} = {v} > {PARITY_BOUND}")
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_exchange.json "
+                         "(write it when missing)")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+
+    result = run_all()
+    bad = check_invariants(result)
+    if bad:
+        for b in bad:
+            print(f"[fl_exchange] INVARIANT VIOLATED: {b}")
+        return 1
+
+    if args.check and os.path.exists(args.out):
+        with open(args.out) as f:
+            committed = json.load(f)
+        failures = []
+        for name, cell in result["cells"].items():
+            old = committed.get("cells", {}).get(name)
+            if old is None:
+                continue
+            ok = True
+            if cell["wire_mb_per_round"] > old["wire_mb_per_round"] + 1e-9:
+                ok = False
+                print(f"[fl_exchange] check {name}: wire bytes grew "
+                      f"{old['wire_mb_per_round']} -> "
+                      f"{cell['wire_mb_per_round']} MB")
+            ceil_ms = old["exchange_ms"] * REGRESSION_FACTOR
+            if cell["exchange_ms"] > ceil_ms:
+                ok = False
+                print(f"[fl_exchange] check {name}: {cell['exchange_ms']}ms "
+                      f"vs committed {old['exchange_ms']}ms "
+                      f"(ceiling {ceil_ms:.3f})")
+            if not ok:
+                failures.append(name)
+        if failures:
+            print(f"[fl_exchange] FAIL: regression in {failures}")
+            return 1
+        print("[fl_exchange] check passed")
+        return 0
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[fl_exchange] wrote {os.path.abspath(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,38 @@
 """Weight/gradient compression for the cross-island exchange (beyond-paper
 distributed-optimisation trick; the paper only notes transmission cost).
 
-Per-block symmetric int8 quantisation with error feedback: the quantisation
-residual is accumulated locally and added to the next round's delta, so the
-compression is unbiased over time (Seide et al. / EF-SGD style).  The TPU
-hot path is kernels/quant8 (Pallas); this module is the jnp reference used
-everywhere else.
+Two quantisation SCALE LAYOUTS share one symmetric-int8 core
+(`_symmetric_q8`); which one applies depends on where the bytes live:
+
+  * **blockwise** (wire format) -- flatten, pad to a multiple of `block`,
+    quantise (nblocks, block) with one fp32 scale per block.  This is the
+    serialised form that crosses Tier-A links (warehouse / fog uplinks):
+    layout-free, so the receiver only needs `shape` to reconstruct.  The
+    pad DOES cross the wire: `compressed_bytes` counts nblocks*block int8
+    payload plus 4 bytes per scale.
+  * **rowwise** (sharding-preserving) -- one fp32 scale per last-dim
+    channel; `q` keeps the SAME shape as the input, so inside an SPMD
+    program the quantised tensor inherits the input's sharding and the
+    exchange never forces a reshard.  Used by
+    `federated.fl_aggregate_compressed`; the TPU hot path for both
+    layouts is kernels/quant8 (Pallas), this module is the jnp reference
+    used everywhere else.
+
+Top-k sparsification (`sparsify_topk` / `topk_mask`) composes with either
+layout; `compress_tree(mode=...)` exposes "q8" | "topk" | "q8_topk".
+`ErrorFeedback` accumulates the compression residual locally and adds it
+to the next round's delta, so any of the modes is unbiased over time
+(Seide et al. / EF-SGD style).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+MODES = ("q8", "topk", "q8_topk")
 
 
 def _pad_to_block(flat, block):
@@ -21,14 +43,25 @@ def _pad_to_block(flat, block):
     return flat, n
 
 
+def _symmetric_q8(x):
+    """Shared scale-layout core: symmetric int8 along the LAST axis.
+    x: (..., G) fp32 -> (int8 same shape, fp32 scales (..., 1))."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.maximum(scale, 1e-12)   # zero rows -> q = 0 (scale clamp)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Blockwise (wire format)
+# --------------------------------------------------------------------------
+
 def quantize_blockwise(x, *, block: int = 256):
     """x: any-shape float -> (int8 (nblocks, block), fp32 scales (nblocks,))."""
     flat, _ = _pad_to_block(x.astype(jnp.float32).reshape(-1), block)
-    blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    safe = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    q, scale = _symmetric_q8(flat.reshape(-1, block))
+    return q, scale[:, 0]
 
 
 def dequantize_blockwise(q, scale, shape):
@@ -39,48 +72,153 @@ def dequantize_blockwise(q, scale, shape):
     return flat[:n].reshape(shape)
 
 
-def compress_tree(tree, *, block: int = 256):
-    """pytree -> pytree of (q8, scale) pairs (leaves become dicts)."""
+# --------------------------------------------------------------------------
+# Rowwise (sharding-preserving, per last-dim channel)
+# --------------------------------------------------------------------------
+
+def quantize_rowwise(x):
+    """x: (..., C) float -> (int8 SAME shape, fp32 scales (..., 1)).
+    No flatten, no pad: q inherits x's sharding (the exchange layout)."""
+    return _symmetric_q8(x.astype(jnp.float32))
+
+
+def dequantize_rowwise(q, scale, *, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Top-k sparsification
+# --------------------------------------------------------------------------
+
+def _k_of(n: int, k_frac: float) -> int:
+    return max(1, min(n, int(math.ceil(k_frac * n))))
+
+
+def sparsify_topk(x, *, k_frac: float = 0.05):
+    """Keep the k = ceil(k_frac * n) largest-magnitude entries (wire form).
+    Returns (idx int32 (k,), val fp32 (k,)) over the flattened x."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = _k_of(flat.shape[0], k_frac)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return idx.astype(jnp.int32), flat[idx]
+
+
+def topk_mask(x, *, k_frac: float = 0.05, batch_dims: int = 0):
+    """Shape/sharding-preserving top-k: a boolean mask keeping, per batch
+    element (leading `batch_dims` axes), every entry whose magnitude
+    reaches the k-th largest.  Ties at the threshold keep a few extra
+    entries rather than gathering (no reshard inside SPMD)."""
+    xf = jnp.abs(x.astype(jnp.float32))
+    flat = xf.reshape(x.shape[:batch_dims] + (-1,))
+    k = _k_of(flat.shape[-1], k_frac)
+    kth = jax.lax.top_k(flat, k)[0][..., -1]
+    kth = kth.reshape(x.shape[:batch_dims] + (1,) * (x.ndim - batch_dims))
+    return xf >= jnp.maximum(kth, 1e-30)   # all-zero input keeps nothing
+
+
+# --------------------------------------------------------------------------
+# Tree compression (mode = "q8" | "topk" | "q8_topk")
+# --------------------------------------------------------------------------
+
+def compress_tree(tree, *, mode: str = "q8", block: int = 256,
+                  k_frac: float = 0.05):
+    """pytree -> pytree of wire-format dicts (leaves become dicts).
+
+    "q8":      {"q", "scale", "shape", "dtype"}          blockwise int8
+    "topk":    {"idx", "val", "shape", "dtype"}          sparse fp32
+    "q8_topk": {"idx", "q", "scale", "k", "shape", "dtype"}  sparse int8
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown compression mode '{mode}' (use {MODES})")
+
     def one(leaf):
-        q, s = quantize_blockwise(leaf, block=block)
-        return {"q": q, "scale": s, "shape": tuple(leaf.shape),
-                "dtype": str(leaf.dtype)}
+        meta = {"shape": tuple(leaf.shape), "dtype": str(leaf.dtype)}
+        if mode == "q8":
+            q, s = quantize_blockwise(leaf, block=block)
+            return {"q": q, "scale": s, **meta}
+        idx, val = sparsify_topk(leaf, k_frac=k_frac)
+        if mode == "topk":
+            return {"idx": idx, "val": val, **meta}
+        q, s = quantize_blockwise(val, block=block)
+        return {"idx": idx, "q": q, "scale": s, "k": int(idx.shape[0]),
+                **meta}
     return jax.tree.map(one, tree)
+
+
+def _is_cleaf(x):
+    return isinstance(x, dict) and ("q" in x or "val" in x)
 
 
 def decompress_tree(ctree):
     def one(d):
-        x = dequantize_blockwise(d["q"], d["scale"], d["shape"])
+        n = 1
+        for s in d["shape"]:
+            n *= s
+        if "idx" in d:
+            if "val" in d:                       # topk
+                val = d["val"]
+            else:                                # q8_topk
+                val = dequantize_blockwise(d["q"], d["scale"],
+                                           (d["k"],))
+            x = jnp.zeros((n,), jnp.float32).at[d["idx"]].set(val)
+            x = x.reshape(d["shape"])
+        else:                                    # q8
+            x = dequantize_blockwise(d["q"], d["scale"], d["shape"])
         return x.astype(d["dtype"])
-    return jax.tree.map(one, ctree,
-                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    return jax.tree.map(one, ctree, is_leaf=_is_cleaf)
 
 
-def compressed_bytes(tree, *, block: int = 256) -> int:
-    """Bytes on the wire for the compressed form (int8 + fp32 scales).
-    `block` must match the `compress_tree(block=...)` the wire actually
-    uses -- the count was silently hardcoded to 256 before."""
+def compressed_bytes(tree, *, mode: str = "q8", block: int = 256,
+                     k_frac: float = 0.05) -> int:
+    """Bytes on the wire for the compressed form.  `block`/`k_frac` must
+    match the `compress_tree(...)` call the wire actually uses.
+
+    "none" counts the uncompressed storage bytes.  "q8" counts the PADDED
+    int8 payload -- `quantize_blockwise` pads to a block multiple, so the
+    wire carries nblocks*block + 4*nblocks bytes (an earlier version
+    counted only the n unpadded bytes).  "q8_rowwise" counts the
+    sharding-preserving exchange layout: n int8 + one fp32 scale per
+    last-dim row.  Works on abstract leaves (anything with shape/dtype).
+    """
     total = 0
     for leaf in jax.tree.leaves(tree):
-        n = leaf.size
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        if mode == "none":
+            total += n * np.dtype(leaf.dtype).itemsize
+            continue
+        if mode == "q8_rowwise":
+            rows = n // leaf.shape[-1] if leaf.shape else 1
+            total += n + 4 * rows
+            continue
         nblocks = -(-n // block)
-        total += n + 4 * nblocks
+        if mode == "q8":
+            total += nblocks * block + 4 * nblocks
+        elif mode == "topk":
+            total += 8 * _k_of(n, k_frac)            # int32 idx + fp32 val
+        elif mode == "q8_topk":
+            k = _k_of(n, k_frac)
+            kb = -(-k // block)
+            total += 4 * k + kb * block + 4 * kb     # idx + padded q8 vals
+        else:
+            raise ValueError(f"unknown compression mode '{mode}'")
     return total
 
 
 class ErrorFeedback:
-    """Stateful residual accumulator: delta_sent = Q(delta + residual)."""
+    """Stateful residual accumulator: delta_sent = C(delta + residual).
+    Works for any `compress_tree` mode -- the residual carries both the
+    quantisation error and the entries top-k dropped."""
 
     def __init__(self, like_tree):
         self.residual = jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), like_tree)
 
-    def compress(self, delta, *, block: int = 256):
+    def compress(self, delta, *, mode: str = "q8", block: int = 256,
+                 k_frac: float = 0.05):
         carried = jax.tree.map(
             lambda d, r: d.astype(jnp.float32) + r, delta, self.residual)
-        ctree = compress_tree(carried, block=block)
+        ctree = compress_tree(carried, mode=mode, block=block, k_frac=k_frac)
         deq = decompress_tree(jax.tree.map(
-            lambda d: dict(d, dtype="float32"), ctree,
-            is_leaf=lambda x: isinstance(x, dict) and "q" in x))
+            lambda d: dict(d, dtype="float32"), ctree, is_leaf=_is_cleaf))
         self.residual = jax.tree.map(lambda c, q: c - q, carried, deq)
         return ctree

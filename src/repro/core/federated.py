@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation
+from repro.core import aggregation, compression
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,7 +36,10 @@ class FLConfig:
     mode: str = "sync"             # sync | async
     async_base_alpha: float = 0.6
     staleness_scheme: str = "polynomial"
-    compress: bool = False         # int8 delta compression on the exchange
+    compress: str = "none"         # exchange compression:
+    #                                none | q8 | topk | q8_topk
+    topk_frac: float = 0.05        # kept fraction for the topk modes
+    overlap: bool = False          # double-buffer exchange w/ local steps
 
 
 def stack_islands(tree, n_islands: int):
@@ -71,30 +74,77 @@ def fl_aggregate(stacked_params, mixing):
     return aggregation.mix_islands(stacked_params, mixing)
 
 
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
 def fl_aggregate_compressed(stacked_params, base_params, mixing, *,
-                            block: int = 256):
-    """Beyond-paper: exchange int8-quantised DELTAS from the shared
-    last-sync base instead of raw weights.
+                            mode: str = "q8", k_frac: float = 0.05,
+                            impl: str = "auto"):
+    """Beyond-paper: exchange compressed DELTAS from the shared last-sync
+    base instead of raw weights, in ONE jitted step:
+    (sparsify ->) quantize -> mixing collective -> dequantize.
 
     Every island already holds `base_params` (the previous exchange's
-    result), so only Q8(x_i - base) + per-block scales cross the pod axis:
-    ~4x fewer wire bytes than the f32 exchange (and immune to the CPU
-    backend's bf16->f32 collective legalisation -- int8 stays int8).
-    Requires row-stochastic mixing (sum_j M[i,j] = 1), which all FLight
-    mixes satisfy.  TPU hot path: kernels/quant8."""
+    result), so only the compressed delta crosses the pod axis: int8 +
+    per-channel scales for "q8" (~4x fewer wire bytes than f32, and
+    immune to the CPU backend's bf16->f32 collective legalisation -- int8
+    stays int8), optionally top-k sparsified first ("topk" keeps fp32
+    values, "q8_topk" stacks both).  Requires row-stochastic mixing
+    (sum_j M[i,j] = 1), which all FLight mixes satisfy.
+
+    Per-channel (last-dim) scales keep q the SAME shape/sharding as the
+    leaf -- flattening would force a cross-axis reshard (a first
+    formulation gathered over every mesh axis; see SSPerf).  The top-k
+    stage is the threshold-mask form (compression.topk_mask) for the same
+    reason: a gather of the survivors would reshard.
+
+    impl="auto" quantises through the fused kernels/quant8 Pallas pass on
+    TPU and falls back to the jnp reference (core.compression, same
+    rounding) elsewhere; dequantisation stays jnp so XLA fuses it into
+    the mixing contraction."""
+    if mode == "none":
+        return fl_aggregate(stacked_params, mixing)
+    if mode not in compression.MODES:
+        raise ValueError(f"unknown exchange compression mode '{mode}'")
+    use_pallas = _resolve_impl(impl) == "pallas"
+
     def mix(leaf, b):
         delta = (leaf.astype(jnp.float32) - b.astype(jnp.float32))
-        # per-channel (last-dim) scales keep q the SAME shape/sharding as
-        # the leaf -- flattening would force a cross-axis reshard (a first
-        # formulation gathered over every mesh axis; see SSPerf).
-        scale = jnp.max(jnp.abs(delta), axis=-1, keepdims=True) / 127.0
-        q = jnp.clip(jnp.round(delta / jnp.maximum(scale, 1e-12)),
-                     -127, 127).astype(jnp.int8)
-        deq = q.astype(jnp.float32) * scale
-        mixed = jnp.tensordot(mixing.astype(jnp.float32), deq, axes=1)
+        if mode in ("topk", "q8_topk"):
+            # per-island top-k over the leaf (batch dim = island axis)
+            mask = compression.topk_mask(delta, k_frac=k_frac,
+                                         batch_dims=1)
+            delta = jnp.where(mask, delta, 0.0)
+        if mode in ("q8", "q8_topk"):
+            if use_pallas:
+                from repro.kernels.quant8 import ops as q8ops
+                q, scale = q8ops.quantize_rowwise(delta)
+            else:
+                q, scale = compression.quantize_rowwise(delta)
+            delta = q.astype(jnp.float32) * scale
+        mixed = jnp.tensordot(mixing.astype(jnp.float32), delta, axes=1)
         return (b.astype(jnp.float32) + mixed).astype(leaf.dtype)
 
     return jax.tree.map(mix, stacked_params, base_params)
+
+
+def fl_overlap_merge(params, mixed, snapshot):
+    """Re-apply the local progress made WHILE the exchange was in flight.
+
+    With the double-buffered exchange (launch/train.py --overlap) the
+    mixing collective for round r runs concurrently with the first local
+    step of round r+1, which therefore starts from the pre-exchange
+    snapshot.  When the collective lands, the exchange correction
+    (mixed - snapshot) is added on top of the current params -- the local
+    step is never recomputed, the exchange is one step stale."""
+    def one(p, m, s):
+        out = (p.astype(jnp.float32) + m.astype(jnp.float32)
+               - s.astype(jnp.float32))
+        return out.astype(p.dtype)
+    return jax.tree.map(one, params, mixed, snapshot)
 
 
 def selection_mixing(weights: np.ndarray, selected: np.ndarray) -> np.ndarray:

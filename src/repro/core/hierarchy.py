@@ -157,19 +157,37 @@ def flat_mixing_matrix(weights: Sequence[float]) -> np.ndarray:
 
 
 def hierarchical_sync_aggregate(stacked_params, weights: Sequence[float],
-                                cell_of: Sequence[int]):
+                                cell_of: Sequence[int], *,
+                                compress: str = "none",
+                                base_params=None,
+                                k_frac: float = 0.05):
     """Two `fl_aggregate` hops (edge then cloud) over the island axis.
 
     cloud_mixing_matrix @ edge_mixing_matrix == flat_mixing_matrix, so this
     equals the flat exchange -- but no single mixing ever has fan-in wider
-    than max(cell size, n_cells)."""
-    from repro.core.federated import fl_aggregate
-    fog = fl_aggregate(stacked_params,
-                       jnp.asarray(edge_mixing_matrix(weights, cell_of),
-                                   jnp.float32))
-    return fl_aggregate(fog,
-                        jnp.asarray(cloud_mixing_matrix(weights, cell_of),
-                                    jnp.float32))
+    than max(cell size, n_cells).
+
+    With compress != "none" both hops run the compressed delta exchange
+    (`federated.fl_aggregate_compressed`, modes q8/topk/q8_topk) against
+    the shared last-sync `base_params`: the edge mixing is block-diagonal,
+    so the first compressed collective stays CELL-LOCAL (only the narrow
+    cell->cloud hop spans cells), matching the fog-tier byte budget the
+    paper's transmission-cost analysis targets.  Equals the flat
+    compressed exchange up to one extra quantisation of the fog-stage
+    deltas (bounded by the per-row scale; see tests/test_hierarchy.py)."""
+    from repro.core.federated import fl_aggregate, fl_aggregate_compressed
+    edge_M = jnp.asarray(edge_mixing_matrix(weights, cell_of), jnp.float32)
+    cloud_M = jnp.asarray(cloud_mixing_matrix(weights, cell_of), jnp.float32)
+    if compress in (None, False, "none"):
+        fog = fl_aggregate(stacked_params, edge_M)
+        return fl_aggregate(fog, cloud_M)
+    if base_params is None:
+        raise ValueError("compressed hierarchical exchange needs the "
+                         "shared last-sync base_params")
+    fog = fl_aggregate_compressed(stacked_params, base_params, edge_M,
+                                  mode=compress, k_frac=k_frac)
+    return fl_aggregate_compressed(fog, base_params, cloud_M,
+                                   mode=compress, k_frac=k_frac)
 
 
 def hierarchical_async_aggregate(stacked_params, alphas: Sequence[float],

@@ -1,1 +1,2 @@
-from repro.kernels.quant8.ops import quantize, dequantize
+from repro.kernels.quant8.ops import (dequantize, dequantize_rowwise,
+                                      quantize, quantize_rowwise)

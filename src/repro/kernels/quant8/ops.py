@@ -1,11 +1,25 @@
-"""Public quant8 API mirroring core.compression's blockwise layout."""
+"""Public quant8 API mirroring core.compression's two scale layouts.
+
+* `quantize` / `dequantize` -- BLOCKWISE wire format ((nblocks, block)
+  int8 + per-block scales), for serialised transfer.
+* `quantize_rowwise` / `dequantize_rowwise` -- per last-dim-channel
+  scales; q keeps the input's shape (and therefore its sharding), the
+  layout `federated.fl_aggregate_compressed` rides on the TPU hot path.
+
+Both dispatch to the Pallas kernels (interpret mode off-TPU) unless
+impl="ref" forces the jnp reference in core.compression.
+"""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant8.kernel import (BLOCK, dequantize_blocked,
                                          quantize_blocked)
+
+LANES = 128  # TPU lane width: rowwise pads the channel dim up to this
 
 
 def _use_interpret() -> bool:
@@ -14,14 +28,14 @@ def _use_interpret() -> bool:
 
 def quantize(x, *, block: int = BLOCK, impl: str = "auto"):
     """x any shape -> (q int8 (nblocks, block), scales (nblocks,))."""
+    if impl == "ref":
+        from repro.core.compression import quantize_blockwise
+        return quantize_blockwise(x, block=block)
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.shape[0]) % block
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     xb = flat.reshape(-1, block)
-    if impl == "ref":
-        from repro.core.compression import quantize_blockwise
-        return quantize_blockwise(x, block=block)
     q, s = quantize_blocked(xb, interpret=_use_interpret())
     return q, s[:, 0]
 
@@ -38,3 +52,41 @@ def dequantize(q, scales, shape, *, out_dtype=jnp.float32,
     for d in shape:
         n *= d
     return flat[:n].reshape(shape)
+
+
+def quantize_rowwise(x, *, impl: str = "auto"):
+    """x: (..., C) -> (q int8 SAME shape, fp32 scales (..., 1)).
+
+    The leading dims collapse to kernel rows and C pads up to a lane
+    multiple (zero pad never changes a row's absmax), so the result
+    matches core.compression.quantize_rowwise exactly while the absmax +
+    scale + round + cast run as one fused VMEM pass."""
+    if impl == "ref":
+        from repro.core.compression import quantize_rowwise as ref
+        return ref(x)
+    C = x.shape[-1]
+    rows = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    x2 = x.astype(jnp.float32).reshape(rows, C)
+    padc = (-C) % LANES
+    if padc:
+        x2 = jnp.pad(x2, ((0, 0), (0, padc)))
+    q, s = quantize_blocked(x2, interpret=_use_interpret())
+    return q[:, :C].reshape(x.shape), s.reshape(x.shape[:-1] + (1,))
+
+
+def dequantize_rowwise(q, scale, *, out_dtype=jnp.float32,
+                       impl: str = "auto"):
+    """Inverse of quantize_rowwise: q (..., C) int8, scale (..., 1)."""
+    if impl == "ref":
+        from repro.core.compression import dequantize_rowwise as ref
+        return ref(q, scale, out_dtype=out_dtype)
+    C = q.shape[-1]
+    rows = math.prod(q.shape[:-1]) if q.ndim > 1 else 1
+    q2 = q.reshape(rows, C)
+    padc = (-C) % LANES
+    if padc:
+        q2 = jnp.pad(q2, ((0, 0), (0, padc)))
+    out = dequantize_blocked(q2, scale.reshape(rows, 1),
+                             out_dtype=out_dtype,
+                             interpret=_use_interpret())
+    return out[:, :C].reshape(q.shape)

@@ -1,3 +1,6 @@
 """Pure-jnp oracle for quant8 (shared with core.compression)."""
 from repro.core.compression import (quantize_blockwise as quantize_ref,
-                                    dequantize_blockwise as dequantize_ref)
+                                    dequantize_blockwise as dequantize_ref,
+                                    quantize_rowwise as quantize_rowwise_ref,
+                                    dequantize_rowwise as
+                                    dequantize_rowwise_ref)

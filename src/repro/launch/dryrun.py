@@ -178,6 +178,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             aggc_shard = (agg_shard[0], agg_shard[0], agg_shard[1])
             lower_entry("fl_aggregate_q8", aggc, aggc_shard, aggc_args,
                         donate=(0,))
+            # analytic bytes-on-wire per exchange round (whole stacked
+            # tree, all islands).  The q8 wire counts follow
+            # compression.compressed_bytes: blockwise includes the
+            # block-multiple PAD the wire actually carries; rowwise is
+            # the sharding-preserving layout fl_aggregate_q8 ships.
+            from repro.core import compression as _comp
+            sds = abstract_params(p_defs)
+            result["entries"]["fl_aggregate"]["wire_bytes_analytic"] = {
+                "raw_storage": _comp.compressed_bytes(sds, mode="none")}
+            result["entries"]["fl_aggregate_q8"]["wire_bytes_analytic"] = {
+                "q8_rowwise": _comp.compressed_bytes(sds, mode="q8_rowwise"),
+                "q8_wire_blockwise": _comp.compressed_bytes(sds, mode="q8"),
+                "q8_topk_wire": _comp.compressed_bytes(sds, mode="q8_topk"),
+            }
         else:
             result["entries"]["fl_aggregate"] = {
                 "note": "single island on the single-pod mesh: the exchange "

@@ -107,12 +107,19 @@ def make_fl_train_step(model, optimizer, n_islands: int, **kw):
                     spmd_axis_name="pod")
 
 
-def make_fl_aggregate(compress: bool = False):
+def make_fl_aggregate(compress=False, *, k_frac: float = 0.05):
     """(stacked_params, mixing (P,P)) -> mixed stacked_params.  The paper's
-    whole weight-exchange round as one collective over the pod axis."""
-    if compress:
-        return federated.fl_aggregate_compressed
-    return federated.fl_aggregate
+    whole weight-exchange round as one collective over the pod axis.
+
+    compress: False/"none" -> raw exchange (storage dtype on the wire);
+    True/"q8", "topk", "q8_topk" (dashes accepted) -> the compressed
+    delta exchange, signature (stacked, base, mixing)."""
+    mode = {False: "none", None: "none", True: "q8"}.get(compress, compress)
+    mode = mode.replace("-", "_")
+    if mode == "none":
+        return federated.fl_aggregate
+    return partial(federated.fl_aggregate_compressed, mode=mode,
+                   k_frac=k_frac)
 
 
 def make_prefill_step(model):

@@ -42,8 +42,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--compress", action="store_true",
-                    help="int8 delta compression on the exchange")
+    ap.add_argument("--compress", nargs="?", const="q8", default="none",
+                    choices=["none", "q8", "topk", "q8-topk"],
+                    help="delta compression on the exchange (bare flag "
+                         "keeps the old int8 behaviour = q8)")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="kept fraction for the topk compression modes")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer the exchange: dispatch round r's "
+                         "mixing collective, run round r+1's first local "
+                         "step concurrently, then merge (1-step-stale "
+                         "exchange; federated.fl_overlap_merge)")
     ap.add_argument("--fog-cells", type=int, default=1,
                     help="two-tier exchange: islands aggregate within fog "
                          "cells, then across cells (== flat for matching "
@@ -55,9 +64,12 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     P = args.islands
+    compress = args.compress.replace("-", "_")
     opt = adamw(cosine_warmup(args.lr, 10, args.steps))
     step = jax.jit(make_fl_train_step(model, opt, P))
-    agg = jax.jit(make_fl_aggregate(compress=args.compress))
+    agg = jax.jit(make_fl_aggregate(compress=compress,
+                                    k_frac=args.topk_frac))
+    merge = jax.jit(fed.fl_overlap_merge)
     clock = fed.IslandClock(P)
 
     params = model.init(jax.random.key(args.seed))
@@ -92,38 +104,65 @@ def main(argv=None):
             b = jax.tree.map(lambda v: v[0], b)
         return b
 
+    def dispatch_exchange(cur_params, sel):
+        """Issue this round's mixing collective (async under jax dispatch).
+        Returns (mixed_params | None, tag)."""
+        w = (n_data / n_data.sum()) * sel
+        if w.sum() <= 0:               # nobody selected -> no exchange
+            return None, "no-exchange"
+        if args.fog_cells > 1:
+            # edge->fog->cloud: two narrow mixing hops instead of one
+            # P-wide collective (identical result; tests/test_hierarchy).
+            # With compression the edge hop's collective is CELL-LOCAL.
+            from repro.core import hierarchy
+            cell_of = np.arange(P) % args.fog_cells
+            mixed = hierarchy.hierarchical_sync_aggregate(
+                cur_params, w, cell_of, compress=compress,
+                base_params=base_params if compress != "none" else None,
+                k_frac=args.topk_frac)
+            tag = f"fog-exchange x{args.fog_cells}"
+        else:
+            M = jnp.asarray(
+                fed.selection_mixing(n_data / n_data.sum(), sel),
+                jnp.float32)
+            if compress != "none":
+                mixed = agg(cur_params, base_params, M)
+            else:
+                mixed = agg(cur_params, M)
+            tag = "exchange"
+        if compress != "none":
+            tag += f"+{args.compress}"
+        return mixed, tag
+
+    pending = None   # (mixed, snapshot) while an overlapped exchange flies
     for s in range(start, args.steps):
         t0 = time.time()
         params, opt_state, metrics = step(params, opt_state, batch_at(s))
+        tag = "local"
+        if pending is not None:
+            # round r's collective was in flight during this step (it ran
+            # from the snapshot): fold the exchange correction in without
+            # recomputing the step (1-step-stale exchange)
+            mixed, snap = pending
+            params = merge(params, mixed, snap)
+            base_params = mixed
+            pending = None
+            tag = "local+merge"
         jax.block_until_ready(metrics["loss"])
         dt = time.time() - t0
         clock.observe(np.full(P, dt))  # per-island step times (uniform on CPU)
         loss = np.asarray(metrics["loss"]).mean()
         if (s + 1) % args.local_steps == 0 and P > 1:
             sel = clock.selection(args.straggler_slack)
-            if args.fog_cells > 1:
-                # edge->fog->cloud: two narrow mixing hops instead of one
-                # P-wide collective (identical result; tests/test_hierarchy)
-                from repro.core import hierarchy
-                w = (n_data / n_data.sum()) * sel
-                if w.sum() > 0:        # nobody selected -> no exchange
-                    cell_of = np.arange(P) % args.fog_cells
-                    params = hierarchy.hierarchical_sync_aggregate(
-                        params, w, cell_of)
-                    base_params = jax.tree.map(lambda x: x, params)
-                tag = f"fog-exchange x{args.fog_cells}"
+            mixed, tag = dispatch_exchange(params, sel)
+            if mixed is None:
+                pass
+            elif args.overlap and s + 1 < args.steps:
+                pending = (mixed, params)  # merge lands after next step
+                tag += "+overlap"
             else:
-                M = jnp.asarray(
-                    fed.selection_mixing(n_data / n_data.sum(), sel),
-                    jnp.float32)
-                if args.compress:
-                    params = agg(params, base_params, M)
-                else:
-                    params = agg(params, M)
-                base_params = jax.tree.map(lambda x: x, params)
-                tag = "exchange" + ("+int8" if args.compress else "")
-        else:
-            tag = "local"
+                params = mixed
+                base_params = mixed
         print(f"[train] step={s+1} loss={loss:.4f} {dt*1e3:.0f}ms {tag}",
               flush=True)
         if mgr and (s + 1) % args.ckpt_every == 0:

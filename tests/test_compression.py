@@ -42,24 +42,86 @@ def test_compressed_bytes_smaller():
 
 
 def test_compressed_bytes_matches_compress_tree_block():
-    """The byte count must agree with the actual compressed form at a
-    NON-default block size (it used to hardcode 256)."""
+    """The byte count must agree EXACTLY with the wire payload at any
+    block size: quantize_blockwise pads to a block multiple, so the wire
+    carries nblocks*block int8 bytes + 4 per scale (an earlier count
+    dropped the pad)."""
     t = {"w": jnp.ones((300, 7), jnp.float32), "b": jnp.ones((5,))}
     for block in (32, 64, 100, 256):
         c = comp.compress_tree(t, block=block)
         actual = sum(d["q"].size + 4 * d["scale"].size
-                     for d in jax.tree.leaves(
-                         c, is_leaf=lambda x: isinstance(x, dict) and "q" in x))
-        # compressed_bytes counts n payload int8 bytes (not the pad) plus
-        # 4 bytes per block scale
-        n = sum(leaf.size for leaf in jax.tree.leaves(t))
-        nblocks = sum(d["scale"].size for d in jax.tree.leaves(
-            c, is_leaf=lambda x: isinstance(x, dict) and "q" in x))
-        assert comp.compressed_bytes(t, block=block) == n + 4 * nblocks
-        assert comp.compressed_bytes(t, block=block) <= actual
-    # different blocks really change the count
-    assert comp.compressed_bytes(t, block=32) > \
+                     for d in jax.tree.leaves(c, is_leaf=comp._is_cleaf))
+        assert comp.compressed_bytes(t, block=block) == actual
+    # different blocks really change the count; on small leaves the pad
+    # dominates, so big blocks cost MORE bytes than small ones
+    assert comp.compressed_bytes(t, block=32) < \
         comp.compressed_bytes(t, block=256)
+
+
+def test_compressed_bytes_modes_and_abstract_leaves():
+    """Mode accounting: q8_topk < topk < q8 < none on a big enough leaf;
+    works on abstract (ShapeDtypeStruct) leaves too."""
+    t = {"w": jnp.ones((4096, 64), jnp.float32)}
+    b = {m: comp.compressed_bytes(t, mode=m, k_frac=0.05)
+         for m in ("none", "q8", "topk", "q8_topk")}
+    assert b["q8_topk"] < b["topk"] < b["q8"] < b["none"]
+    assert b["none"] == 4096 * 64 * 4
+    abstract = {"w": jax.ShapeDtypeStruct((4096, 64), jnp.float32)}
+    for m in ("none", "q8", "topk", "q8_topk", "q8_rowwise"):
+        assert comp.compressed_bytes(abstract, mode=m, k_frac=0.05) == \
+            comp.compressed_bytes(t, mode=m, k_frac=0.05)
+    # rowwise: n int8 + one fp32 scale per last-dim row
+    assert comp.compressed_bytes(t, mode="q8_rowwise") == \
+        4096 * 64 + 4 * 4096
+
+
+def test_sparsify_topk_and_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(40, 5)), jnp.float32)
+    idx, val = comp.sparsify_topk(x, k_frac=0.1)           # k = 20
+    assert idx.shape == (20,) and val.shape == (20,)
+    flat = np.asarray(x).reshape(-1)
+    kept = set(np.argsort(np.abs(flat))[-20:])
+    assert set(np.asarray(idx)) == kept
+    np.testing.assert_allclose(np.asarray(val), flat[np.asarray(idx)])
+    for mode in ("topk", "q8_topk"):
+        c = comp.compress_tree({"x": x}, mode=mode, k_frac=0.1)
+        out = comp.decompress_tree(c)["x"]
+        assert out.shape == x.shape and out.dtype == x.dtype
+        got = np.asarray(out).reshape(-1)
+        dropped = sorted(set(range(200)) - kept)
+        np.testing.assert_allclose(got[dropped], 0.0)      # dropped -> 0
+        tol = 0 if mode == "topk" else np.abs(flat).max() / 127
+        np.testing.assert_allclose(got[np.asarray(idx)], flat[np.asarray(idx)],
+                                   atol=tol + 1e-7)
+
+
+def test_topk_mask_threshold_semantics():
+    x = jnp.asarray([[0.1, -5.0, 0.2, 3.0], [1.0, 0.0, -2.0, 0.5]],
+                    jnp.float32)
+    m = np.asarray(comp.topk_mask(x, k_frac=0.5, batch_dims=1))
+    np.testing.assert_array_equal(m, [[False, True, False, True],
+                                      [True, False, True, False]])
+    # all-zero input keeps nothing (scale-clamp path upstream)
+    assert not np.asarray(comp.topk_mask(jnp.zeros((3, 8)), k_frac=0.5,
+                                         batch_dims=1)).any()
+
+
+def test_rowwise_blockwise_cross_layout_equivalence():
+    """The shared _symmetric_q8 core makes the two scale layouts agree:
+    rowwise on an (nblocks, block) view == blockwise on the flat array."""
+    rng = np.random.default_rng(3)
+    block = 64
+    x = jnp.asarray(rng.normal(size=(6 * block,)), jnp.float32)
+    qb, sb = comp.quantize_blockwise(x, block=block)
+    qr, sr = comp.quantize_rowwise(x.reshape(6, block))
+    np.testing.assert_array_equal(np.asarray(qb), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(sr)[:, 0],
+                               rtol=1e-7)
+    deq_b = comp.dequantize_blockwise(qb, sb, (6, block))
+    deq_r = comp.dequantize_rowwise(qr, sr)
+    np.testing.assert_allclose(np.asarray(deq_b), np.asarray(deq_r),
+                               rtol=1e-7)
 
 
 def test_error_feedback_unbiased_over_rounds():
@@ -112,3 +174,24 @@ def test_error_feedback_converges_property(seed, rounds, block):
                                atol=1e-4 * rounds)
     # residual never exceeds half of the largest quantisation step seen
     assert np.abs(resid).max() <= max_step / 2 + 1e-6
+
+
+@given(st.sampled_from(["topk", "q8_topk"]), st.integers(0, 2**31 - 1))
+def test_error_feedback_carries_topk_drops(mode, seed):
+    """The residual carries the entries top-k dropped: the bookkeeping
+    identity sent + residual == true holds for the sparse modes too."""
+    rng = np.random.default_rng(seed)
+    n = 192
+    ef = comp.ErrorFeedback({"w": jnp.zeros((n,), jnp.float32)})
+    total_true = np.zeros(n)
+    total_sent = np.zeros(n)
+    for _ in range(10):
+        delta = {"w": jnp.asarray(rng.normal(size=n) * 0.02, jnp.float32)}
+        ctree = ef.compress(delta, mode=mode, k_frac=0.1)
+        sent = comp.decompress_tree(jax.tree.map(
+            lambda d: dict(d, dtype="float32"), ctree,
+            is_leaf=comp._is_cleaf))
+        total_true += np.asarray(delta["w"])
+        total_sent += np.asarray(sent["w"])
+    np.testing.assert_allclose(total_sent + np.asarray(ef.residual["w"]),
+                               total_true, atol=1e-3)

@@ -76,6 +76,91 @@ def test_compressed_aggregate_close_to_exact():
                                    rtol=0.08, atol=0.08)
 
 
+def _mixing(P):
+    return jnp.asarray(fed.selection_mixing(np.full(P, 1 / P), np.ones(P)),
+                       jnp.float32)
+
+
+def test_compressed_dispatches_through_quant8_kernels(monkeypatch):
+    """The TPU path (impl="pallas"; interpret off-TPU) must quantise
+    through kernels/quant8, not the inline jnp re-implementation."""
+    from repro.kernels.quant8 import ops as q8ops
+    calls = []
+    real = q8ops.quantize_rowwise
+
+    def spy(x, **kw):
+        calls.append(x.shape)
+        return real(x, **kw)
+
+    monkeypatch.setattr(q8ops, "quantize_rowwise", spy)
+    P = 4
+    sp = stacked(P, seed=5)
+    base = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), sp)
+    ref = fed.fl_aggregate_compressed(sp, base, _mixing(P), impl="ref")
+    assert calls == []                      # jnp fallback never touches it
+    pal = fed.fl_aggregate_compressed(sp, base, _mixing(P), impl="pallas")
+    assert len(calls) == len(jax.tree.leaves(sp))
+    # acceptance: fused exchange parity vs jnp reference <= 1e-2 max-abs
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(pal)):
+        err = np.abs(np.asarray(a, np.float32)
+                     - np.asarray(b, np.float32)).max()
+        assert err <= 1e-2
+
+
+@pytest.mark.parametrize("mode", ["q8", "topk", "q8_topk"])
+def test_compressed_modes_close_to_exact(mode):
+    P = 4
+    sp = stacked(P, seed=3)
+    base = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), sp)
+    exact = fed.fl_aggregate(sp, _mixing(P))
+    # k_frac=1.0 keeps everything: topk must then be harmless
+    approx = fed.fl_aggregate_compressed(sp, base, _mixing(P), mode=mode,
+                                         k_frac=1.0)
+    for a, b in zip(jax.tree.leaves(exact), jax.tree.leaves(approx)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.08, atol=0.08)
+
+
+def test_topk_aggregate_moves_only_large_coordinates():
+    P = 2
+    base = {"w": jnp.zeros((P, 8), jnp.float32)}
+    delta = np.zeros((P, 8), np.float32)
+    delta[:, 0] = 4.0          # the one big coordinate per island
+    delta[:, 1:] = 0.01
+    sp = {"w": jnp.asarray(delta)}
+    out = fed.fl_aggregate_compressed(sp, base, _mixing(P), mode="topk",
+                                      k_frac=1 / 8)
+    got = np.asarray(out["w"])
+    np.testing.assert_allclose(got[:, 0], 4.0, rtol=1e-6)
+    np.testing.assert_allclose(got[:, 1:], 0.0)   # small coords dropped
+
+
+def test_compressed_zero_delta_is_identity():
+    """No island moved -> scale clamp path -> output == base exactly."""
+    P = 3
+    base = stacked(P, seed=9)
+    out = fed.fl_aggregate_compressed(base, base, _mixing(P), mode="q8")
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(base)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_overlap_merge_carries_local_progress():
+    """fl_overlap_merge(params, mixed, snapshot) == mixed + (params -
+    snapshot): the local step taken while the collective flew survives."""
+    P = 2
+    snap = stacked(P, seed=11)
+    mixed = fed.fl_aggregate(snap, _mixing(P))
+    progress = jax.tree.map(lambda x: (x.astype(jnp.float32) + 0.5
+                                       ).astype(x.dtype), snap)
+    merged = fed.fl_overlap_merge(progress, mixed, snap)
+    for m, x in zip(jax.tree.leaves(merged), jax.tree.leaves(mixed)):
+        np.testing.assert_allclose(np.asarray(m, np.float32),
+                                   np.asarray(x, np.float32) + 0.5,
+                                   rtol=1e-2, atol=1e-2)
+
+
 def test_island_clock_straggler_selection():
     c = fed.IslandClock(4)
     c.observe(np.array([1.0, 1.1, 0.9, 5.0]))

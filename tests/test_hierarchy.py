@@ -91,6 +91,30 @@ def test_hierarchical_async_aggregate_equals_flat(P, K):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
 
 
+@pytest.mark.parametrize("compress", ["q8", "topk", "q8_topk"])
+def test_hierarchical_compressed_close_to_flat(compress):
+    """Compressed fog exchange: the edge hop mixes cell-locally (block-
+    diagonal mixing), so only the compressed delta crosses the cloud hop.
+    With k_frac=1.0 top-k keeps everything, leaving only int8 rounding
+    between the compressed two-tier path and the exact flat mixing."""
+    P, K = 6, 2
+    stacked = random_stacked(P, seed=P + K)
+    weights, cell_of = random_weights_cells(P, K, seed=P + K)
+    base = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), stacked)
+    flat = federated.fl_aggregate(
+        stacked, jnp.asarray(hierarchy.flat_mixing_matrix(weights),
+                             jnp.float32))
+    hier = hierarchy.hierarchical_sync_aggregate(
+        stacked, weights, cell_of, compress=compress, base_params=base,
+        k_frac=1.0)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0.1, atol=0.1)
+    with pytest.raises(ValueError):
+        hierarchy.hierarchical_sync_aggregate(stacked, weights, cell_of,
+                                              compress="q8")
+
+
 # -- dict level (Tier A responses) ----------------------------------------
 
 def test_fog_aggregate_responses_equals_flat():

@@ -58,6 +58,60 @@ def test_quant8_sweep(n, scale):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 
+@pytest.mark.parametrize("impl", ["auto", "ref"])   # auto = interpret Pallas
+@pytest.mark.parametrize("n", [100, 257, 1000])     # non-multiples of BLOCK
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant8_nonmultiple_and_bf16(impl, n, dtype):
+    """Kernel<->reference parity on sizes that force the pad path and on
+    bf16 inputs, in both interpret and ref modes."""
+    from repro.core.compression import dequantize_blockwise, quantize_blockwise
+    from repro.kernels.quant8.ops import dequantize, quantize
+    x = jnp.asarray(rng.normal(size=(n,)) * 3.0, dtype)
+    q, s = quantize(x, impl=impl)
+    qr, sr = quantize_blockwise(x)
+    # bf16 values sitting exactly on a rounding boundary may round one ulp
+    # apart between the kernel and the reference; never more than that
+    dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= (0 if dtype == jnp.float32 else 1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    got = dequantize(q, s, (n,), impl=impl)
+    want = dequantize_blockwise(qr, sr, (n,))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=float(np.max(np.asarray(sr))))
+
+
+@pytest.mark.parametrize("impl", ["auto", "ref"])
+def test_quant8_zero_delta_scale_clamp(impl):
+    """All-zero input exercises the scale clamp: q == 0, scale == 0, and
+    the roundtrip returns exact zeros (no NaN from the 0/0 guard)."""
+    from repro.kernels.quant8.ops import dequantize, quantize
+    x = jnp.zeros((777,), jnp.float32)
+    q, s = quantize(x, impl=impl)
+    assert not np.asarray(q).any() and not np.asarray(s).any()
+    np.testing.assert_array_equal(np.asarray(dequantize(q, s, (777,),
+                                                        impl=impl)), 0.0)
+
+
+@pytest.mark.parametrize("impl", ["auto", "ref"])
+@pytest.mark.parametrize("shape", [(5, 7), (3, 300), (1000,), (2, 3, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant8_rowwise_matches_reference(impl, shape, dtype):
+    """The sharding-preserving rowwise layout (per last-dim channel):
+    same shape out, exact parity with core.compression's reference, for
+    lane-padded channel counts and bf16 inputs alike."""
+    from repro.core import compression as comp
+    from repro.kernels.quant8.ops import dequantize_rowwise, quantize_rowwise
+    x = jnp.asarray(rng.normal(size=shape) * 2.0, dtype)
+    q, s = quantize_rowwise(x, impl=impl)
+    qr, sr = comp.quantize_rowwise(x)
+    assert q.shape == x.shape and s.shape == x.shape[:-1] + (1,)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    got = dequantize_rowwise(q, s, impl=impl)
+    want = comp.dequantize_rowwise(qr, sr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
 # ---------------- flash attention ----------------
 
 @pytest.mark.parametrize("T,H,Hkv,D,window,bq,bk", [
