@@ -182,6 +182,68 @@ def exchange_section() -> str:
     return "".join(body)
 
 
+def serve_section() -> str:
+    """Paged-serving latency table from the committed BENCH_serve.json
+    (benchmarks/serve_load.py) -- measured under open-loop load, so it can
+    be refreshed without re-running the dry-run sweep (`--serve-only`)."""
+    import json
+    path = ROOT / "BENCH_serve.json"
+    body = ["<!-- serve:begin -->\n",
+            "## Paged serving under load (measured, BENCH_serve.json)\n\n",
+            "From `benchmarks/serve_load.py`: the block-table paged serve "
+            "loop\n(`PagedServeLoop`, core/paging.py allocator) vs the "
+            "contiguous per-slot\ncache, driven by the seeded open-loop "
+            "generator (`launch/loadgen.py`)\non the granite smoke model.  "
+            "The parity row replays one trace through\nboth cache "
+            "disciplines on a virtual clock and requires token-identical\n"
+            "outputs.  See README \"Production serving\".\n\n"]
+    if not path.exists():
+        body.append("*BENCH_serve.json missing -- run "
+                    "`PYTHONPATH=src python benchmarks/serve_load.py`.*\n")
+        body.append("<!-- serve:end -->\n")
+        return "".join(body)
+    bench = json.loads(path.read_text())
+    body.append("| cell | reqs | p50 ms | p99 ms | ttft p50 ms | "
+                "tok/s | shared blocks | preempt |\n"
+                "|---|---|---|---|---|---|---|---|\n")
+    for name, c in sorted(bench["cells"].items()):
+        body.append(
+            f"| {name} | {c['n_requests']} | {c['p50_ms']:.0f} | "
+            f"{c['p99_ms']:.0f} | {c['ttft_p50_ms']:.0f} | "
+            f"{c['tokens_per_s']:.1f} | {c.get('shared_blocks', '--')} | "
+            f"{c.get('preemptions', '--')} |\n")
+    par = bench.get("parity", {})
+    if par:
+        body.append(
+            f"\nParity: {par['mismatches']}/{par['n_requests']} requests "
+            f"diverged between paged and contiguous greedy decode "
+            f"({par['shared_blocks']} prefix blocks shared); the "
+            f"invariant `mismatches == 0` is enforced on every "
+            f"benchmark run.  Workload: {bench['workload']}; pool "
+            f"{bench['pool']['num_blocks']}x{bench['pool']['block_size']} "
+            f"blocks, chunk {bench['pool']['chunk']}.\n")
+    body.append("<!-- serve:end -->\n")
+    return "".join(body)
+
+
+def splice_serve() -> None:
+    """Replace (or insert) only the paged-serving section of the existing
+    EXPERIMENTS.md, leaving the artifact-derived tables alone."""
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    section = serve_section()
+    begin, end = "<!-- serve:begin -->", "<!-- serve:end -->\n"
+    if begin in text:
+        pre = text[: text.index(begin)]
+        post = text[text.index(end) + len(end):]
+        text = pre + section + post
+    else:
+        anchor = "## hbm_bytes calibration"
+        text = text.replace(anchor, section + "\n" + anchor, 1)
+    path.write_text(text)
+    print(f"spliced paged-serving section into {path}")
+
+
 def splice_exchange() -> None:
     """Replace (or insert) only the compressed-exchange section of the
     existing EXPERIMENTS.md, leaving the artifact-derived tables alone --
@@ -255,6 +317,7 @@ collective-bound for every arch; the amortized column divides by the
 paper's E=8 local steps between exchanges.
 
 {EXCHANGE}
+{SERVE}
 ## hbm_bytes calibration (trip-count model vs XLA bytes-accessed)
 
 {CALIBRATION}
@@ -268,9 +331,16 @@ def main(argv=None):
                     help="re-splice just the compressed-exchange section "
                          "(from BENCH_exchange.json) into the existing "
                          "EXPERIMENTS.md; no dry-run artifacts needed")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="re-splice just the paged-serving section "
+                         "(from BENCH_serve.json) into the existing "
+                         "EXPERIMENTS.md; no dry-run artifacts needed")
     args = ap.parse_args(argv)
     if args.exchange_only:
         splice_exchange()
+        return
+    if args.serve_only:
+        splice_serve()
         return
     single = R.markdown_table(
         [r for r in map(R.cell_row, R.load_cells("single")) if r])
@@ -279,6 +349,7 @@ def main(argv=None):
     out = HEADER.format(SUMMARY=sweep_summary(), LAYOUT=layout_table(),
                         TABLE_SINGLE=single, TABLE_MULTI=multi,
                         FL_AGG=fl_agg_table(), EXCHANGE=exchange_section(),
+                        SERVE=serve_section(),
                         CALIBRATION=calibration_table())
     (ROOT / "EXPERIMENTS.md").write_text(out)
     print(f"wrote EXPERIMENTS.md ({len(out)} bytes)")

@@ -293,6 +293,91 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
     return out.reshape(B, 1, H, D)
 
 
+def paged_kv_write(kp, vp, bt, kk, vv, positions):
+    """Scatter per-token K/V into the paged pool.
+
+    kp/vp: (NB, BS, Hkv, D) block pool shared by ALL sequences;
+    bt: (B, nbmax) block tables; kk/vv: (B, C, Hkv, D) new K/V;
+    positions: (B, C) ABSOLUTE positions, -1 marking padding rows whose
+    writes are dropped (bucketed prefill pads the tail chunk).
+
+    Distinct sequences write distinct blocks by construction (shared
+    prefix blocks are read-only: the allocator only shares full prompt
+    blocks, and writes happen at positions >= the private tail), so the
+    scatter is collision-free.
+    """
+    nb, bs = kp.shape[0], kp.shape[1]
+    valid = positions >= 0
+    pos = jnp.where(valid, positions, 0)
+    page = jnp.take_along_axis(bt, pos // bs, axis=1)          # (B, C)
+    flat = jnp.where(valid, page * bs + pos % bs, nb * bs)     # OOB drops
+    flat = flat.reshape(-1)
+    kf = kp.reshape(nb * bs, *kp.shape[2:])
+    vf = vp.reshape(nb * bs, *vp.shape[2:])
+    kf = kf.at[flat].set(
+        kk.reshape(-1, *kk.shape[2:]).astype(kp.dtype), mode="drop")
+    vf = vf.at[flat].set(
+        vv.reshape(-1, *vv.shape[2:]).astype(vp.dtype), mode="drop")
+    return kf.reshape(kp.shape), vf.reshape(vp.shape)
+
+
+def paged_gather_kv(kp, vp, bt):
+    """Gather each sequence's K/V view from the block pool.
+
+    Returns (B, nbmax*BS, Hkv, D) -- unallocated table entries (0-filled)
+    gather block 0's contents; callers mask by sequence length so the
+    garbage never contributes attention weight.
+    """
+    nb, bs = kp.shape[0], kp.shape[1]
+    B, nbmax = bt.shape
+    idx = (bt[:, :, None] * bs + jnp.arange(bs)[None, None]).reshape(B, -1)
+    kf = kp.reshape(nb * bs, *kp.shape[2:])
+    vf = vp.reshape(nb * bs, *vp.shape[2:])
+    return kf[idx], vf[idx]
+
+
+def paged_chunk_attention(q, k_seq, v_seq, positions):
+    """Exact causal attention of a prefill CHUNK over the paged view.
+
+    q: (B, C, H, D) chunk queries; k_seq/v_seq: (B, S, Hkv, D) gathered
+    pages (already containing this chunk's K/V *and* any shared-prefix
+    blocks); positions: (B, C) absolute query positions (-1 = padding;
+    such rows attend to nothing real and their output is discarded).
+    Scores materialise as (C, S) only -- long prompts stream through in
+    bounded-size chunks.
+    """
+    B, C, H, D = q.shape
+    S, Hkv = k_seq.shape[1], k_seq.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, C, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg, k_seq,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)
+    mask = kpos[None, None, :] <= positions[:, :, None]        # (B, C, S)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v_seq)
+    return out.reshape(B, C, H, D)
+
+
+def paged_attention_cache_defs(cfg, batch, num_blocks, block_size,
+                               max_blocks_per_seq):
+    """Abstract paged-cache leaves (per layer): one block POOL shared by
+    all sequences plus per-slot block tables and lengths.  Unlike the
+    contiguous cache, HBM scales with the pool (total tokens resident),
+    not max_batch * max_len."""
+    kv = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    ax = (None, None, "kv_heads", None)
+    return {
+        "kp": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
+        "vp": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
+        "bt": pdef((batch, max_blocks_per_seq), ("batch", None),
+                   dtype=jnp.int32, init="zeros"),
+        "len": pdef((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
 def select_attention(q, k, v, *, causal=True, window=0, q_offset=0):
     """Pick exact vs blockwise path from the (static) sequence length.
 
@@ -379,7 +464,26 @@ def attention_apply(p, cfg, x, positions, *, mode="train", cache=None,
         kk = rope_apply(kk, positions, cfg.rope_theta, cfg.rope_fraction)
 
     new_cache = cache
-    if mode == "decode":
+    if mode == "chunk_prefill":
+        # paged chunked prefill: scatter this chunk's K/V into the block
+        # pool, then exact attention over the sequence's gathered view
+        # (which already holds any shared-prefix blocks -- their
+        # positions are simply never re-computed).
+        assert not window, "paged cache does not support sliding windows"
+        kp, vp = paged_kv_write(cache["kp"], cache["vp"], cache["bt"],
+                                kk, vv, positions)
+        k_seq, v_seq = paged_gather_kv(kp, vp, cache["bt"])
+        out = paged_chunk_attention(q, k_seq, v_seq, positions)
+        new_cache = {"kp": kp, "vp": vp}
+    elif mode == "decode" and "kp" in cache:
+        assert not window, "paged cache does not support sliding windows"
+        kp, vp, bt = cache["kp"], cache["vp"], cache["bt"]
+        cache_len = cache["len"]
+        kp, vp = paged_kv_write(kp, vp, bt, kk, vv, cache_len[:, None])
+        k_seq, v_seq = paged_gather_kv(kp, vp, bt)
+        out = decode_attention(q, k_seq, v_seq, cache_len + 1)
+        new_cache = {"kp": kp, "vp": vp, "bt": bt, "len": cache_len + 1}
+    elif mode == "decode":
         k_cache, v_cache, cache_len = cache["k"], cache["v"], cache["len"]
         S = k_cache.shape[1]
         if window and S == window:

@@ -50,6 +50,21 @@ class Model:
                              f"{self.cfg.family})")
         return self._cache_defs(self.cfg, batch, seq_len)
 
+    @property
+    def supports_paged_cache(self) -> bool:
+        """Block-table paging applies to growing KV caches (transformer
+        families); SSM/RG-LRU state is O(1) per sequence and the enc-dec
+        cross cache is static, so those keep the contiguous path."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def paged_cache_defs(self, batch: int, num_blocks: int, block_size: int,
+                         max_blocks_per_seq: int):
+        if not self.supports_paged_cache:
+            raise ValueError(f"{self.cfg.name}: paged KV cache unsupported "
+                             f"(family={self.cfg.family})")
+        return transformer.paged_cache_defs(
+            self.cfg, batch, num_blocks, block_size, max_blocks_per_seq)
+
     # ---- inputs ----
     def input_defs(self, shape: ShapeConfig):
         cfg = self.cfg

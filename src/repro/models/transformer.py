@@ -42,6 +42,15 @@ def cache_defs(cfg, batch: int, seq_len: int):
     return stack_defs(per_layer, cfg.num_layers)
 
 
+def paged_cache_defs(cfg, batch: int, num_blocks: int, block_size: int,
+                     max_blocks_per_seq: int):
+    """Block-table paged decode cache (see core/paging.py): one KV block
+    pool per layer, shared by all slots, plus per-slot tables/lengths."""
+    per_layer = L.paged_attention_cache_defs(
+        cfg, batch, num_blocks, block_size, max_blocks_per_seq)
+    return stack_defs(per_layer, cfg.num_layers)
+
+
 def _block_apply(p, cfg, x, positions, mode, cache):
     h = L.apply_norm(p["ln1"], x, cfg.norm)
     a, new_cache = L.attention_apply(p["attn"], cfg, h, positions,
@@ -72,22 +81,31 @@ def lm_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
     if mode == "decode":
         # cache["len"] is stacked (L, B); all layers share the same length.
         positions = batch_inputs.get("positions", cache["len"][0].reshape(B, 1))
+    elif mode == "chunk_prefill":
+        # absolute positions of this chunk's tokens; -1 marks padding rows
+        # (bucketed tail chunks) whose cache writes and logits are dropped.
+        positions = batch_inputs["positions"]
     else:
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    bt = batch_inputs.get("block_tables")  # (B, nbmax), chunk_prefill only
 
     def body(carry, xs):
         x, aux = carry
-        if mode == "decode":
+        if mode in ("decode", "chunk_prefill"):
             lp, lc = xs
         else:
             lp, lc = xs, None
+        if mode == "chunk_prefill":
+            lc = {**lc, "bt": bt}
         x, new_cache, a = _block_apply(lp, cfg, x, positions, mode, lc)
+        if mode == "chunk_prefill":
+            new_cache = {k: new_cache[k] for k in ("kp", "vp")}
         return (x, aux + a), new_cache
 
     if cfg.remat and mode == "train":
         body = jax.checkpoint(body, prevent_cse=False)
 
-    if mode == "decode":
+    if mode in ("decode", "chunk_prefill"):
         # cache leaves are stacked (L, ...): per-layer slices ride the scan.
         (x, aux), new_cache = lax.scan(body, (x, 0.0),
                                        (params["layers"], cache))
@@ -96,6 +114,11 @@ def lm_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
 
     if mode == "prefill":
         x = x[:, -1:]  # serving needs only the last position's logits
+    elif mode == "chunk_prefill":
+        # only the last VALID position's logits matter (tail chunks are
+        # padded to a bucket length)
+        li = batch_inputs["last_index"].reshape(B, 1, 1)
+        x = jnp.take_along_axis(x, li, axis=1)
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.unembed_apply(params["embed"], x)
     logits = constrain(logits, ("batch", None, "vocab"))

@@ -63,6 +63,66 @@ def test_prefill_then_decode_matches_teacher_forcing(arch):
     np.testing.assert_allclose(got, ref_last, rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("arch", ["granite-20b", "chatglm3-6b"])
+def test_paged_chunk_prefill_then_decode_matches_teacher_forcing(arch):
+    """Block-table paged path at the LOGITS level: chunked/bucketed
+    prefill through the block pool, then paged decode steps, must match
+    teacher forcing like the contiguous path does (granite = MQA,
+    chatglm = GQA + partial rope + qkv bias)."""
+    from repro.models.param import is_def
+
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(7))
+    B, T, extra = 1, 13, 3
+    bs, chunk, num_blocks = 4, 8, 8
+    L = cfg.num_layers
+    full = _batch(model, T + extra, B, seed=7)
+    ref_logits, _ = model.apply(params, full, mode="train")
+
+    defs = model.paged_cache_defs(B, num_blocks, bs, num_blocks)
+    zeros = jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype), defs,
+                         is_leaf=is_def)
+    pages = {"kp": zeros["kp"], "vp": zeros["vp"]}
+    # identity block table: position p lives in block p // bs
+    bt = jnp.arange(num_blocks, dtype=jnp.int32)[None]          # (1, nb)
+
+    # chunked prefill: [0, 8) full chunk, then [8, 13) padded to bucket 8
+    logits = None
+    pos = 0
+    while pos < T:
+        c = min(chunk, T - pos)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :c] = np.asarray(full["tokens"][0, pos: pos + c])
+        pv = np.full((1, chunk), -1, np.int32)
+        pv[0, :c] = np.arange(pos, pos + c)
+        logits, pages = model.apply(
+            params, {"tokens": jnp.asarray(toks),
+                     "positions": jnp.asarray(pv),
+                     "block_tables": bt,
+                     "last_index": jnp.asarray([c - 1], jnp.int32)},
+            mode="chunk_prefill", cache=pages)
+        pos += c
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(ref_logits[:, T - 1], np.float32),
+        rtol=2e-2, atol=2e-2)
+
+    stack = lambda x: jnp.broadcast_to(x[None], (L,) + x.shape)
+    for i in range(extra):
+        cache = {"kp": pages["kp"], "vp": pages["vp"], "bt": stack(bt),
+                 "len": stack(jnp.full((B,), T + i, jnp.int32))}
+        dec_in = {"tokens": full["tokens"][:, T + i: T + i + 1],
+                  "positions": jnp.full((B, 1), T + i, jnp.int32)}
+        logits, cache = model.apply(params, dec_in, mode="decode",
+                                    cache=cache)
+        pages = {"kp": cache["kp"], "vp": cache["vp"]}
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(ref_logits[:, T + i], np.float32),
+            rtol=2e-2, atol=2e-2)
+
+
 def test_multi_step_decode_consistent():
     """Three consecutive decode steps match teacher forcing (dense arch)."""
     cfg = get_smoke_config("granite-20b")

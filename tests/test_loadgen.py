@@ -1,0 +1,113 @@
+"""Load-generator determinism + trace-driver semantics (launch/loadgen.py).
+
+Same SimRecord discipline as the scenario engine (tests/test_scenarios.py):
+the full record stream -- arrival times, prompts, output budgets, and on a
+virtual clock even the per-request outputs and timestamps -- must be a pure
+function of the seed."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.launch import loadgen
+from repro.launch.serve_loop import PagedServeLoop, ServeLoop
+from repro.models import build_model
+
+
+def _cfg(**kw):
+    base = dict(qps=20.0, duration_s=1.0, seed=11, vocab_size=499,
+                prompt_mean=12, prompt_max=40, out_mean=5, out_max=10,
+                shared_prefix_frac=0.3, shared_prefix_len=8)
+    base.update(kw)
+    return loadgen.LoadConfig(**base)
+
+
+def test_generate_is_deterministic():
+    a = loadgen.generate(_cfg())
+    b = loadgen.generate(_cfg())
+    assert len(a) == len(b) > 0
+    for x, y in zip(a, b):
+        assert x.rid == y.rid
+        assert x.t == y.t
+        assert x.max_new == y.max_new
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+
+
+def test_generate_seed_changes_trace():
+    a = loadgen.generate(_cfg())
+    b = loadgen.generate(_cfg(seed=12))
+    assert [x.t for x in a] != [y.t for y in b]
+
+
+def test_generate_respects_bounds():
+    arrivals = loadgen.generate(_cfg(duration_s=2.0))
+    assert all(0 < a.t < 2.0 for a in arrivals)
+    assert all(4 <= len(a.prompt) <= 40 for a in arrivals)
+    assert all(2 <= a.max_new <= 10 for a in arrivals)
+    # open loop: arrival times are sorted and rate is in the right ballpark
+    ts = [a.t for a in arrivals]
+    assert ts == sorted(ts)
+    assert 10 <= len(arrivals) <= 80        # 20 qps x 2 s, poisson spread
+
+
+def test_shared_prefixes_present():
+    arrivals = loadgen.generate(_cfg(shared_prefix_frac=1.0,
+                                     n_prefixes=1))
+    first = arrivals[0].prompt[:8]
+    for a in arrivals:
+        np.testing.assert_array_equal(a.prompt[:8], first)
+
+
+def test_virtual_clock_run_is_deterministic():
+    """Two full virtual-clock runs (fresh loops, same seed) produce
+    identical records: timestamps, prompts, and generated tokens."""
+    cfg = get_smoke_config("granite-20b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    trace = loadgen.generate(_cfg(qps=30.0, duration_s=0.5))
+
+    def run():
+        loop = PagedServeLoop(model, params, max_batch=2, num_blocks=32,
+                              block_size=8, chunk=16)
+        return loadgen.run_trace(loop, trace, tick_s=0.01)
+
+    r1, r2 = run(), run()
+    assert r1 == r2
+    assert all(rec.t_done >= rec.t_first >= rec.t_arrive >= 0 for rec in r1)
+
+
+def test_summarize_percentiles():
+    recs = [loadgen.ServedRecord(rid=i, t_arrive=0.0, t_first=0.1,
+                                 t_done=0.1 * (i + 1), n_prompt=4,
+                                 out=(1, 2, 3))
+            for i in range(10)]
+    s = loadgen.summarize(recs, wall_s=2.0)
+    assert s["n_requests"] == 10
+    assert s["tokens_out"] == 30
+    assert s["tokens_per_s"] == 15.0
+    assert s["p50_ms"] == pytest.approx(550.0, abs=20)
+    assert s["p99_ms"] <= 1000.0
+    assert s["ttft_p50_ms"] == pytest.approx(100.0, abs=1)
+
+
+@pytest.mark.scale
+def test_load_smoke_invariants():
+    """Small end-to-end load test against the benchmark's invariants
+    (paged==contiguous parity, prefix sharing active); the full QPS run
+    lives in benchmarks/serve_load.py (serve CI step)."""
+    cfg = get_smoke_config("granite-20b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    trace = loadgen.generate(loadgen.LoadConfig(
+        qps=20.0, duration_s=1.0, seed=5, vocab_size=cfg.vocab_size,
+        prompt_mean=16, prompt_max=48, out_mean=6, out_max=12,
+        shared_prefix_frac=0.5, shared_prefix_len=16))
+    ploop = PagedServeLoop(model, params, max_batch=4, num_blocks=48,
+                           block_size=8, chunk=32)
+    cloop = ServeLoop(model, params, max_batch=4, max_len=384)
+    got = loadgen.run_trace(ploop, trace, tick_s=0.01)
+    want = loadgen.run_trace(cloop, trace, tick_s=0.01)
+    assert [r.out for r in got] == [r.out for r in want]
+    assert ploop.alloc.stats["shared_blocks"] > 0
+    ploop.alloc.check_invariants()
