@@ -1,0 +1,178 @@
+"""Byzantine-robustness benchmark -> BENCH_faults.json (run by the `scale`
+CI job).
+
+Runs the scenario engine under a seeded 20%-Byzantine fault plan
+(sign-flip + 10x scale blow-up, core/faults.py) and compares aggregators:
+
+  clean_fedavg      no faults, weighted FedAvg        (the reference)
+  attacked_fedavg   faults + weighted FedAvg          (must degrade)
+  attacked_trimmed  faults + coordinate trimmed mean  (within ACC_TOL)
+  attacked_krum     faults + multi-Krum               (within ACC_TOL)
+  attacked_median   faults + coordinate median        (within ACC_TOL)
+  attacked_nonfinite  nan/inf spray + plain FedAvg: the sanitization gate
+                      alone must keep the published model finite
+
+Invariants (checked on every run, not just --check):
+  * every cell's final server params are finite -- no injected NaN/Inf
+    ever reaches the published model;
+  * each robust aggregator's best accuracy is within ACC_TOL (2 points)
+    of the fault-free run;
+  * plain FedAvg under attack loses at least DEGRADE_MIN best accuracy
+    (if it didn't, the attack would be too weak to certify the defenses).
+
+  PYTHONPATH=src python benchmarks/fl_faults.py          # measure + write
+  PYTHONPATH=src python benchmarks/fl_faults.py --check  # compare-or-commit:
+      writes BENCH_faults.json if missing, else fails (exit 1) on an
+      invariant violation or a wall-time regression > REGRESSION_FACTOR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.scenarios import ScenarioConfig, ScenarioSim  # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_faults.json")
+REGRESSION_FACTOR = 3.0   # --check fails when > 3x slower than committed
+ACC_TOL = 0.02            # robust agg must stay within 2 points of clean
+DEGRADE_MIN = 0.10        # plain FedAvg under attack must lose >= this
+
+ROUNDS = 50
+BASE = dict(n_workers=200, cohort_size=12, fog_cells=1, participation=0.2,
+            samples_per_worker=96, epochs=2, dirichlet_alpha=100.0, seed=3)
+ATTACK = dict(byzantine_frac=0.2, byzantine_attacks=("sign_flip", "scale"),
+              byzantine_scale=10.0)
+
+CELLS = {
+    "clean_fedavg": {},
+    "attacked_fedavg": dict(ATTACK),
+    "attacked_trimmed": {**ATTACK, "robust_agg": "trimmed_mean",
+                         "trim_frac": 0.3},
+    "attacked_krum": {**ATTACK, "robust_agg": "krum"},
+    "attacked_median": {**ATTACK, "robust_agg": "median"},
+    "attacked_nonfinite": {**ATTACK,
+                           "byzantine_attacks": ("nan", "inf")},
+}
+
+
+def measure(name: str, knobs: dict) -> dict:
+    cfg = ScenarioConfig(**BASE, **knobs)
+    sim = ScenarioSim(cfg, pool=2048, eval_n=512)
+    t0 = time.monotonic()
+    res = sim.run_sync(ROUNDS)
+    wall = time.monotonic() - t0
+    accs = [r.acc for r in res.records]
+    finite = all(bool(np.isfinite(np.asarray(l)).all())
+                 for l in jax.tree.leaves(res.final_params))
+    return {
+        "rounds": ROUNDS,
+        "robust_agg": knobs.get("robust_agg", "none"),
+        "byzantine_frac": knobs.get("byzantine_frac", 0.0),
+        "best_acc": round(res.best_acc, 4),
+        "final_acc": round(float(np.mean(accs[-3:])), 4),
+        "params_finite": finite,
+        "n_quarantined": len(sim.quarantine),
+        "wall_s": round(wall, 3),
+    }
+
+
+def run_all() -> dict:
+    cells = {}
+    for name, knobs in CELLS.items():
+        print(f"[fl_faults] measuring {name} ...", flush=True)
+        cells[name] = measure(name, knobs)
+    return {
+        "bench": "fl_faults",
+        "scenario": (f"{BASE['n_workers']} workers, cohort "
+                     f"{BASE['cohort_size']}, 20% Byzantine "
+                     "(sign_flip + 10x scale)"),
+        "acc_tol": ACC_TOL,
+        "degrade_min": DEGRADE_MIN,
+        "cells": cells,
+    }
+
+
+def check_invariants(result: dict) -> list[str]:
+    cells = result["cells"]
+    clean = cells["clean_fedavg"]["best_acc"]
+    failures = []
+    for name, cell in cells.items():
+        if not cell["params_finite"]:
+            failures.append(f"{name}: non-finite server params")
+    for name in ("attacked_trimmed", "attacked_krum", "attacked_median"):
+        deficit = clean - cells[name]["best_acc"]
+        status = "OK" if deficit <= ACC_TOL else "VIOLATED"
+        print(f"[fl_faults] {name}: best_acc {cells[name]['best_acc']} "
+              f"(clean {clean}, deficit {deficit:.4f} <= {ACC_TOL}) "
+              f"{status}")
+        if status == "VIOLATED":
+            failures.append(f"{name}: deficit {deficit:.4f} > {ACC_TOL}")
+    drop = clean - cells["attacked_fedavg"]["best_acc"]
+    status = "OK" if drop >= DEGRADE_MIN else "VIOLATED"
+    print(f"[fl_faults] attacked_fedavg: best_acc "
+          f"{cells['attacked_fedavg']['best_acc']} (degradation "
+          f"{drop:.4f} >= {DEGRADE_MIN}) {status}")
+    if status == "VIOLATED":
+        failures.append(
+            f"attacked_fedavg: attack too weak (drop {drop:.4f})")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_faults.json "
+                         "(write it when missing)")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+
+    result = run_all()
+    for name, cell in result["cells"].items():
+        print(f"[fl_faults] {name}: best_acc {cell['best_acc']} "
+              f"final {cell['final_acc']} finite {cell['params_finite']} "
+              f"({cell['wall_s']}s wall)")
+
+    failures = check_invariants(result)
+    if failures:
+        print(f"[fl_faults] FAIL: invariant violations: {failures}")
+        return 1
+
+    if args.check and os.path.exists(args.out):
+        with open(args.out) as f:
+            committed = json.load(f)
+        slow = []
+        for name, cell in result["cells"].items():
+            old = committed.get("cells", {}).get(name)
+            if old is None:
+                continue
+            ceiling = old["wall_s"] * REGRESSION_FACTOR
+            status = "OK" if cell["wall_s"] <= ceiling else "REGRESSED"
+            print(f"[fl_faults] check {name}: {cell['wall_s']}s vs "
+                  f"committed {old['wall_s']}s (ceiling {ceiling:.2f}s) "
+                  f"{status}")
+            if status == "REGRESSED":
+                slow.append(name)
+        if slow:
+            print(f"[fl_faults] FAIL: wall-time regression in {slow}")
+            return 1
+        print("[fl_faults] check passed")
+        return 0
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[fl_faults] wrote {os.path.abspath(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

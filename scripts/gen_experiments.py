@@ -226,6 +226,69 @@ def serve_section() -> str:
     return "".join(body)
 
 
+def faults_section() -> str:
+    """Byzantine-robustness table from the committed BENCH_faults.json
+    (benchmarks/fl_faults.py) -- measured, so it can be refreshed without
+    re-running the dry-run sweep (`--faults-only`)."""
+    import json
+    path = ROOT / "BENCH_faults.json"
+    body = ["<!-- faults:begin -->\n",
+            "## Byzantine robustness (measured, BENCH_faults.json)\n\n",
+            "From `benchmarks/fl_faults.py`: the scenario engine under a "
+            "seeded fault plan\n(`core/faults.py`) -- 20% Byzantine "
+            "workers shipping sign-flipped / 10x-scaled\nupdates -- "
+            "comparing plain weighted FedAvg against the robust "
+            "aggregators, plus\na nan/inf-spray cell where the "
+            "sanitization gate alone must keep the model\nfinite.  See "
+            "README \"Fault tolerance & robust aggregation\".\n\n"]
+    if not path.exists():
+        body.append("*BENCH_faults.json missing -- run "
+                    "`PYTHONPATH=src python benchmarks/fl_faults.py`.*\n")
+        body.append("<!-- faults:end -->\n")
+        return "".join(body)
+    bench = json.loads(path.read_text())
+    body.append("| cell | aggregator | byz frac | best acc | final acc | "
+                "finite | quarantined |\n|---|---|---|---|---|---|---|\n")
+    for name, c in bench["cells"].items():
+        body.append(
+            f"| {name} | {c['robust_agg']} | {c['byzantine_frac']} | "
+            f"{c['best_acc']:.4f} | {c['final_acc']:.4f} | "
+            f"{'yes' if c['params_finite'] else 'NO'} | "
+            f"{c['n_quarantined']} |\n")
+    cells = bench["cells"]
+    clean = cells["clean_fedavg"]["best_acc"]
+    drop = clean - cells["attacked_fedavg"]["best_acc"]
+    worst = max(clean - cells[n]["best_acc"] for n in
+                ("attacked_trimmed", "attacked_krum", "attacked_median"))
+    body.append(
+        f"\nScenario: {bench['scenario']}.  Plain FedAvg loses "
+        f"{drop:.3f} best accuracy under attack; the worst robust "
+        f"aggregator's deficit vs the fault-free run is {worst:.4f} "
+        f"(bound {bench['acc_tol']}).  Both bounds, and `params_finite` "
+        f"for every cell, are enforced on every benchmark run.\n")
+    body.append("<!-- faults:end -->\n")
+    return "".join(body)
+
+
+def _splice(section: str, begin: str, end: str, what: str) -> None:
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    if begin in text:
+        pre = text[: text.index(begin)]
+        post = text[text.index(end) + len(end):]
+        text = pre + section + post
+    else:
+        anchor = "## hbm_bytes calibration"
+        text = text.replace(anchor, section + "\n" + anchor, 1)
+    path.write_text(text)
+    print(f"spliced {what} section into {path}")
+
+
+def splice_faults() -> None:
+    _splice(faults_section(), "<!-- faults:begin -->",
+            "<!-- faults:end -->\n", "byzantine-robustness")
+
+
 def splice_serve() -> None:
     """Replace (or insert) only the paged-serving section of the existing
     EXPERIMENTS.md, leaving the artifact-derived tables alone."""
@@ -318,6 +381,7 @@ paper's E=8 local steps between exchanges.
 
 {EXCHANGE}
 {SERVE}
+{FAULTS}
 ## hbm_bytes calibration (trip-count model vs XLA bytes-accessed)
 
 {CALIBRATION}
@@ -335,12 +399,19 @@ def main(argv=None):
                     help="re-splice just the paged-serving section "
                          "(from BENCH_serve.json) into the existing "
                          "EXPERIMENTS.md; no dry-run artifacts needed")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="re-splice just the byzantine-robustness section "
+                         "(from BENCH_faults.json) into the existing "
+                         "EXPERIMENTS.md; no dry-run artifacts needed")
     args = ap.parse_args(argv)
     if args.exchange_only:
         splice_exchange()
         return
     if args.serve_only:
         splice_serve()
+        return
+    if args.faults_only:
+        splice_faults()
         return
     single = R.markdown_table(
         [r for r in map(R.cell_row, R.load_cells("single")) if r])
@@ -349,7 +420,7 @@ def main(argv=None):
     out = HEADER.format(SUMMARY=sweep_summary(), LAYOUT=layout_table(),
                         TABLE_SINGLE=single, TABLE_MULTI=multi,
                         FL_AGG=fl_agg_table(), EXCHANGE=exchange_section(),
-                        SERVE=serve_section(),
+                        SERVE=serve_section(), FAULTS=faults_section(),
                         CALIBRATION=calibration_table())
     (ROOT / "EXPERIMENTS.md").write_text(out)
     print(f"wrote EXPERIMENTS.md ({len(out)} bytes)")

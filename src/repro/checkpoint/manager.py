@@ -61,12 +61,14 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self._recover()
 
     # ---- save ----
     def save(self, step: int, *, params, opt_state=None, extra: Optional[dict]
              = None):
         ckpt = self.dir / f"step_{step:010d}"
         tmp = self.dir / f".tmp_step_{step:010d}"
+        old = self.dir / f".old_step_{step:010d}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
@@ -76,11 +78,37 @@ class CheckpointManager:
         manifest = {"step": int(step), "time": time.time(),
                     "extra": extra or {}}
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        # Overwrite without a crash window: rename the published dir ASIDE
+        # (atomic), publish the new one (atomic), only then delete the old.
+        # A crash at any point leaves a loadable copy of this step on disk
+        # (either step_X or .old_step_X; _recover() renames the latter
+        # back).  The previous rmtree-then-replace sequence lost the
+        # checkpoint when killed between the two calls.
+        if old.exists():
+            shutil.rmtree(old)
         if ckpt.exists():
-            shutil.rmtree(ckpt)
+            os.replace(ckpt, old)
         os.replace(tmp, ckpt)  # atomic publish
+        if old.exists():
+            shutil.rmtree(old)
         self._rotate()
         return ckpt
+
+    def _recover(self):
+        """Finish an interrupted overwrite: a .old_step_X with no published
+        step_X means the crash hit between un-publish and re-publish --
+        restore the old copy (it is a complete, previously published
+        checkpoint).  A .old with a published sibling is garbage from a
+        crash after publish; delete it, along with stale .tmp dirs."""
+        for p in self.dir.glob(".old_step_*"):
+            step = p.name.split("_")[-1]
+            published = self.dir / f"step_{step}"
+            if published.exists():
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                os.replace(p, published)
+        for p in self.dir.glob(".tmp_step_*"):
+            shutil.rmtree(p, ignore_errors=True)
 
     def _rotate(self):
         steps = self.all_steps()
@@ -94,6 +122,9 @@ class CheckpointManager:
             if (p / "manifest.json").exists():
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
+
+    def path_for(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()

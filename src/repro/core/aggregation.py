@@ -105,6 +105,147 @@ def staleness_alpha(base_alpha: float, staleness: float, *,
 
 
 # --------------------------------------------------------------------------
+# Sanitization helpers (the server-side gate; see server.AggregationServer)
+# --------------------------------------------------------------------------
+
+def tree_finite(tree) -> bool:
+    """True iff every entry of every leaf is finite (no NaN/Inf)."""
+    for leaf in jax.tree.leaves(tree):
+        if not bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32)))):
+            return False
+    return True
+
+
+def delta_norm(tree, base) -> float:
+    """Global L2 norm of (tree - base) across all leaves, in fp32."""
+    acc = 0.0
+    for t, b in zip(jax.tree.leaves(tree), jax.tree.leaves(base)):
+        d = jnp.asarray(t, jnp.float32) - jnp.asarray(b, jnp.float32)
+        acc += float(jnp.sum(d * d))
+    return float(np.sqrt(acc))
+
+
+# --------------------------------------------------------------------------
+# Byzantine-robust aggregators (defense half of core/faults.py)
+# --------------------------------------------------------------------------
+
+ROBUST_METHODS = ("trimmed_mean", "median", "krum", "norm_clip")
+
+
+def _stack_trees(param_list):
+    return jax.tree.map(lambda *ls: jnp.stack(
+        [jnp.asarray(l, jnp.float32) for l in ls]), *param_list)
+
+
+def _flatten_members(stacked) -> jnp.ndarray:
+    """(P, D) matrix: each member's leaves flattened and concatenated."""
+    P = jax.tree.leaves(stacked)[0].shape[0]
+    return jnp.concatenate(
+        [jnp.asarray(l, jnp.float32).reshape(P, -1)
+         for l in jax.tree.leaves(stacked)], axis=1)
+
+
+def trim_k(n_members: int, trim_frac: float) -> int:
+    """Entries trimmed per SIDE: ceil(frac * P), clamped so at least one
+    member survives.  ceil means frac matching the Byzantine fraction
+    always trims at least that many."""
+    k = int(np.ceil(max(float(trim_frac), 0.0) * n_members))
+    return min(k, (n_members - 1) // 2)
+
+
+def krum_select(stacked, f: int, m: int | None = None) -> np.ndarray:
+    """Multi-Krum selection (Blanchard et al. 2017): score each member by
+    the sum of its P - f - 2 smallest squared distances to the others,
+    return the indices of the m lowest-scoring members (m = P - f by
+    default).  Requires no trust assumptions beyond f < (P - 2) / 2;
+    f is clamped into that range."""
+    X = _flatten_members(stacked)
+    P = X.shape[0]
+    f = max(0, min(int(f), (P - 3) // 2)) if P >= 3 else 0
+    m = P - f if m is None else max(1, min(int(m), P))
+    if P <= 2:
+        return np.arange(P)
+    sq = jnp.sum(X * X, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (X @ X.T)
+    d2 = jnp.where(jnp.eye(P, dtype=bool), jnp.inf, jnp.maximum(d2, 0.0))
+    n_near = max(1, P - f - 2)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :n_near], axis=1)
+    order = np.asarray(jnp.argsort(scores))
+    return np.sort(order[:m])
+
+
+def robust_aggregate_stacked(stacked, method: str, *, trim_frac: float = 0.2,
+                             krum_f: int | None = None,
+                             krum_m: int | None = None,
+                             base=None, clip_mult: float = 2.0,
+                             weights=None):
+    """Robust fold of a stacked (P, ...) member tree into ONE aggregate.
+
+    trimmed_mean / median / krum are deliberately UNWEIGHTED: data-size
+    weighting would let an attacker buy influence by advertising samples.
+    norm_clip keeps the weighted mean but first clips every member's
+    delta-from-`base` to clip_mult x the median delta norm (needs `base`).
+    """
+    P = jax.tree.leaves(stacked)[0].shape[0]
+    if method == "trimmed_mean":
+        k = trim_k(P, trim_frac)
+
+        def tm(leaf):
+            x = jnp.sort(jnp.asarray(leaf, jnp.float32), axis=0)
+            x = x[k: P - k] if k > 0 else x
+            return jnp.mean(x, axis=0).astype(leaf.dtype)
+        return jax.tree.map(tm, stacked)
+
+    if method == "median":
+        return jax.tree.map(
+            lambda l: jnp.median(jnp.asarray(l, jnp.float32), axis=0)
+            .astype(l.dtype), stacked)
+
+    if method == "krum":
+        f = int(np.ceil(0.2 * P)) if krum_f is None else int(krum_f)
+        sel = krum_select(stacked, f, krum_m)
+        return jax.tree.map(
+            lambda l: jnp.mean(jnp.asarray(l, jnp.float32)[sel], axis=0)
+            .astype(l.dtype), stacked)
+
+    if method == "norm_clip":
+        if base is None:
+            raise ValueError("norm_clip needs the dispatch base")
+        X = _flatten_members(stacked)
+        b = _flatten_members(jax.tree.map(lambda x: x[None],
+                                          base)).reshape(-1)
+        norms = jnp.linalg.norm(X - b[None, :], axis=1)
+        thr = clip_mult * jnp.median(norms)
+        scale = np.asarray(jnp.minimum(1.0, thr / jnp.maximum(norms, 1e-12)))
+        w = np.full(P, 1.0 / P) if weights is None else \
+            np.asarray(weights, np.float64) / max(np.sum(weights), 1e-12)
+
+        def nc(leaf, bleaf):
+            l32 = jnp.asarray(leaf, jnp.float32)
+            b32 = jnp.asarray(bleaf, jnp.float32)
+            s = jnp.asarray(scale, jnp.float32).reshape(
+                (P,) + (1,) * (l32.ndim - 1))
+            clipped = b32[None] + s * (l32 - b32[None])
+            wv = jnp.asarray(w, jnp.float32).reshape(
+                (P,) + (1,) * (l32.ndim - 1))
+            return jnp.sum(wv * clipped, axis=0).astype(leaf.dtype)
+        return jax.tree.map(nc, stacked, base)
+
+    raise ValueError(f"unknown robust method '{method}' "
+                     f"(have {ROBUST_METHODS})")
+
+
+def robust_aggregate(param_list, method: str, **kw):
+    """List-of-pytrees front-end for `robust_aggregate_stacked` (Tier A:
+    the discrete-event server's responses)."""
+    if not param_list:
+        raise ValueError("no updates to aggregate")
+    template = param_list[0]
+    out = robust_aggregate_stacked(_stack_trees(param_list), method, **kw)
+    return jax.tree.map(lambda o, t: o.astype(t.dtype), out, template)
+
+
+# --------------------------------------------------------------------------
 # Mixing-matrix form (Tier B: one collective over the pod axis)
 # --------------------------------------------------------------------------
 

@@ -46,6 +46,21 @@ class LocalTrainer:
         self._train_cohort = jax.jit(cohort_impl,
                                      static_argnames=("epochs",))
 
+        def finite_ok(tree):
+            return jnp.all(jnp.stack(
+                [jnp.all(jnp.isfinite(l.astype(jnp.float32)))
+                 for l in jax.tree.leaves(tree)]))
+
+        def finite_members(stacked):
+            """(C,) per-member finiteness over a stacked cohort tree."""
+            oks = [jnp.all(jnp.isfinite(l.astype(jnp.float32)),
+                           axis=tuple(range(1, l.ndim)))
+                   for l in jax.tree.leaves(stacked)]
+            return jnp.all(jnp.stack(oks, axis=0), axis=0)
+
+        self._finite_ok = jax.jit(finite_ok)
+        self._finite_members = jax.jit(finite_members)
+
     def _loss(self, params, images, labels):
         logits, aux = self.model.apply(params, {"images": images},
                                        mode="train")
@@ -82,6 +97,17 @@ class LocalTrainer:
     def train(self, params, images, labels, key, epochs: int):
         return self._train(params, images, labels, key, epochs=int(epochs))
 
+    def train_checked(self, params, images, labels, key, epochs: int):
+        """`train` with the non-finite guard: a diverged local step (any
+        NaN/Inf in the result) is SKIPPED -- the input params come back
+        unchanged with ok=False so the caller can report the divergence
+        (the server's quarantine counters; see server.note_divergence)
+        instead of shipping poison to the aggregator."""
+        new = self._train(params, images, labels, key, epochs=int(epochs))
+        if bool(self._finite_ok(new)):
+            return new, True
+        return params, False
+
     def train_cohort(self, params, images, labels, keys, epochs: int):
         """Batched local training: ONE vmapped step over the cohort axis.
 
@@ -93,6 +119,20 @@ class LocalTrainer:
         return self._train_cohort(params, jnp.asarray(images),
                                   jnp.asarray(labels), keys,
                                   epochs=int(epochs))
+
+    def train_cohort_checked(self, params, images, labels, keys, epochs: int):
+        """`train_cohort` with the per-member non-finite guard: diverged
+        members are replaced by the unchanged input params and flagged
+        False in the returned (C,) ok vector."""
+        stacked = self.train_cohort(params, images, labels, keys, epochs)
+        oks = np.asarray(self._finite_members(stacked))
+        if not oks.all():
+            bad = ~oks
+            stacked = jax.tree.map(
+                lambda s, p: jnp.where(
+                    jnp.asarray(bad).reshape((-1,) + (1,) * p.ndim),
+                    p[None], s), stacked, params)
+        return stacked, oks
 
     def evaluate(self, params, images, labels) -> float:
         return float(self._eval(params, images, labels))
@@ -108,9 +148,13 @@ class SimWorker:
     profile: object               # WorkerProfile
 
     base_version: int = -1        # server version the local model is based on
+    diverged: bool = False        # last local step hit the non-finite guard
 
     def local_train(self, params, key, epochs: int):
         if self.images.shape[0] == 0:
             return params
-        return self.trainer.train(params, jnp.asarray(self.images),
-                                  jnp.asarray(self.labels), key, epochs)
+        new, ok = self.trainer.train_checked(
+            params, jnp.asarray(self.images), jnp.asarray(self.labels),
+            key, epochs)
+        self.diverged = not ok
+        return new

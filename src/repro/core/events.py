@@ -10,6 +10,20 @@ Sync:  server selects -> all selected train r epochs -> barrier at the
 Async: server folds each response the moment it arrives (staleness-weighted
        alpha), re-dispatches the worker on the NEW version, and late
        responses are still folded -- never dropped (paper SSIII-C.4 case 3).
+
+Fault injection (core/faults.py): a `FaultPlan` corrupts worker updates on
+the wire (Byzantine attacks), drops / duplicates responses, crash-restarts
+workers, and kills the aggregation server mid-round -- every decision
+seeded and replayable.  Rejected/diverged updates feed the server's
+quarantine counters; async rejections go through the server's bounded
+retry/backoff policy.
+
+Crash-safe resume: with a `CheckpointManager` attached, the FULL simulation
+state (server model + control plane, numpy/jax RNG streams, sim clock, and
+for async the in-flight response heap including trained params) is
+checkpointed at round granularity.  A killed run resumed from the latest
+checkpoint replays the interrupted round and produces a SimRecord stream
+bit-identical to an uninterrupted run (tests/test_resume.py).
 """
 from __future__ import annotations
 
@@ -37,6 +51,7 @@ class SimRecord:
 class SimResult:
     records: list[SimRecord]
     final_params: object = None
+    crashed: bool = False         # server killed mid-round (resume to finish)
 
     def time_to_accuracy(self, target: float) -> float:
         for r in self.records:
@@ -59,7 +74,8 @@ class FLSimulation:
                  test_images, test_labels, *, t_per_sample_ref: float = 2e-3,
                  model_bytes: int = 0, round_overhead: float = 0.5,
                  idle_tick: float = 0.2, time_noise: float = 0.05,
-                 seed: int = 0, cohort: bool = True):
+                 seed: int = 0, cohort: bool = True, faults=None,
+                 ckpt=None, ckpt_every: int = 1):
         self.server = server
         self.workers = workers
         self.test_images = test_images
@@ -74,6 +90,9 @@ class FLSimulation:
         # cohort=True trains same-shape worker groups in one vmapped step
         # (client.LocalTrainer.train_cohort) instead of a Python loop.
         self.cohort = cohort
+        self.faults = faults          # Optional faults.FaultPlan
+        self.ckpt = ckpt              # Optional checkpoint.CheckpointManager
+        self.ckpt_every = max(int(ckpt_every), 1)
         trainer = next(iter(workers.values())).trainer
         self._eval = lambda p: trainer.evaluate(p, test_images, test_labels)
 
@@ -90,50 +109,166 @@ class FLSimulation:
         self.key, k = jax.random.split(self.key)
         return k
 
+    # -- crash-safe state ---------------------------------------------
+    def _save_state(self, kind: str, step: int, t: float, last_acc: float,
+                    *, heap=(), seq: int = 0, merges: int = 0,
+                    rejects: Optional[dict] = None):
+        if self.ckpt is None:
+            return
+        srv = self.server
+        state = {"key": np.asarray(jax.random.key_data(self.key))}
+        if srv._sopt_state.momentum is not None:
+            state["sopt_m"] = srv._sopt_state.momentum
+        if srv._sopt_state.variance is not None:
+            state["sopt_v"] = srv._sopt_state.variance
+        heap_meta = []
+        for i, (t_fin, s, wid, params, base_version, dup) in \
+                enumerate(sorted(heap)):
+            state[f"h{i}"] = params
+            heap_meta.append({"t_fin": t_fin, "seq": s, "wid": wid,
+                              "base_version": base_version, "dup": dup})
+        extra = {"kind": kind, "step": int(step), "t": float(t),
+                 "last_acc": float(last_acc),
+                 "rng_state": self.rng.bit_generator.state,
+                 "server": srv.state_dict(),
+                 "heap_meta": heap_meta, "seq": int(seq),
+                 "merges": int(merges),
+                 "rejects": {str(k): int(v)
+                             for k, v in (rejects or {}).items()}}
+        self.ckpt.save(step, params=srv.params, opt_state=state, extra=extra)
+
+    def _restore_state(self, kind: str) -> dict:
+        from repro.checkpoint.manager import load_pytree
+        srv = self.server
+        step, params, _, extra = self.ckpt.restore(params_like=srv.params)
+        if extra.get("kind") != kind:
+            raise ValueError(f"checkpoint at step {step} is a "
+                             f"'{extra.get('kind')}' run, not '{kind}'")
+        srv.params = jax.tree.map(jax.numpy.asarray, params)
+        srv.load_state_dict(extra["server"])
+        like = {"key": np.asarray(jax.random.key_data(self.key))}
+        if srv._sopt_state.momentum is not None:
+            like["sopt_m"] = srv._sopt_state.momentum
+        if srv._sopt_state.variance is not None:
+            like["sopt_v"] = srv._sopt_state.variance
+        for i in range(len(extra["heap_meta"])):
+            like[f"h{i}"] = srv.params
+        state = load_pytree(self.ckpt.path_for(step) / "opt_state.npz", like)
+        self.key = jax.random.wrap_key_data(
+            jax.numpy.asarray(state["key"], np.uint32))
+        if "sopt_m" in like:
+            srv._sopt_state = dataclasses.replace(
+                srv._sopt_state, momentum=state["sopt_m"])
+        if "sopt_v" in like:
+            srv._sopt_state = dataclasses.replace(
+                srv._sopt_state, variance=state["sopt_v"])
+        self.rng.bit_generator.state = extra["rng_state"]
+        heap = []
+        for i, m in enumerate(extra["heap_meta"]):
+            p = jax.tree.map(
+                lambda a, l: jax.numpy.asarray(a, l.dtype),
+                state[f"h{i}"], srv.params)
+            heap.append((float(m["t_fin"]), int(m["seq"]), int(m["wid"]),
+                         p, int(m["base_version"]), bool(m["dup"])))
+        heapq.heapify(heap)
+        return {"step": step, "t": float(extra["t"]),
+                "last_acc": float(extra["last_acc"]), "heap": heap,
+                "seq": int(extra["seq"]), "merges": int(extra["merges"]),
+                "rejects": {int(k): int(v)
+                            for k, v in extra.get("rejects", {}).items()}}
+
+    def _skip_crash_after(self, resumed_past: int) -> Optional[int]:
+        """The crash that killed the run we are resuming must not re-fire
+        when its round is replayed; later crash rounds still do."""
+        if self.faults is None:
+            return None
+        pending = [int(r) for r in self.faults.cfg.server_crash_rounds
+                   if int(r) > resumed_past]
+        return min(pending, default=None)
+
     # -- cohort training ----------------------------------------------
     def _train_plan(self, params, plan: list[tuple[int, int, object]]
-                    ) -> dict[int, object]:
-        """Execute [(wid, epochs, key), ...] -> {wid: new_params}.
+                    ) -> tuple[dict[int, object], list[int]]:
+        """Execute [(wid, epochs, key), ...] -> ({wid: new_params},
+        diverged_wids).
 
         Workers whose shards share a shape (and epoch count and trainer)
         train as ONE vmapped cohort step; stragglers of odd shape fall back
         to the sequential path.  Keys were drawn per-worker in plan order,
-        so grouping does not perturb the RNG stream (determinism test)."""
+        so grouping does not perturb the RNG stream (determinism test).
+        Workers whose local step went non-finite are guarded out
+        (client.LocalTrainer non-finite guard) and reported instead of
+        shipping poison."""
         groups: dict[tuple, list[tuple[int, object]]] = {}
         for wid, epochs, key in plan:
             w = self.workers[wid]
             gk = (id(w.trainer), w.images.shape, epochs)
             groups.setdefault(gk, []).append((wid, key))
         out: dict[int, object] = {}
+        diverged: list[int] = []
         for (_, shape, epochs), members in groups.items():
             if self.cohort and len(members) > 1 and shape[0] > 0:
                 from repro.core import federated
                 w0 = self.workers[members[0][0]]
                 shards = [(self.workers[m].images, self.workers[m].labels)
                           for m, _ in members]
-                stacked = federated.cohort_train(
-                    w0.trainer, params, shards,
-                    [k for _, k in members], epochs)
+                import jax.numpy as jnp
+                images = jnp.stack([jnp.asarray(x) for x, _ in shards])
+                labels = jnp.stack([jnp.asarray(y) for _, y in shards])
+                stacked, oks = w0.trainer.train_cohort_checked(
+                    params, images, labels,
+                    jnp.stack([k for _, k in members]), epochs)
                 for i, (m, _) in enumerate(members):
-                    out[m] = federated.island_slice(stacked, i)
+                    if bool(oks[i]):
+                        out[m] = federated.island_slice(stacked, i)
+                    else:
+                        diverged.append(m)
             else:
                 for m, key in members:
-                    out[m] = self.workers[m].local_train(params, key, epochs)
+                    p = self.workers[m].local_train(params, key, epochs)
+                    if getattr(self.workers[m], "diverged", False):
+                        diverged.append(m)
+                    else:
+                        out[m] = p
+        return out, diverged
+
+    def _inject_sync(self, responses: dict[int, object], base, rnd: int
+                     ) -> dict[int, object]:
+        """Apply the fault plan to one sync round's responses: Byzantine
+        corruption relative to the dispatch base, then drops / worker
+        crashes (the sync barrier dedupes duplicates by construction)."""
+        if self.faults is None:
+            return responses
+        out = {}
+        for wid, p in responses.items():
+            if self.faults.response_fate(wid, rnd) == "drop":
+                continue
+            out[wid] = self.faults.corrupt(p, base, wid, rnd)
         return out
 
     # -- synchronous ---------------------------------------------------
     def run_sync(self, rounds: int, *, max_time: float = np.inf,
-                 target_acc: float = np.inf) -> SimResult:
+                 target_acc: float = np.inf, resume: bool = False) -> SimResult:
         srv = self.server
-        t = 0.0
-        recs = [SimRecord(0.0, self._eval(srv.params), 0, 0, 0)]
-        for rnd in range(1, rounds + 1):
+        skip_crash = None
+        if resume and self.ckpt is not None and \
+                self.ckpt.latest_step() is not None:
+            st = self._restore_state("sync")
+            t, start, last_acc = st["t"], st["step"], st["last_acc"]
+            recs: list[SimRecord] = []
+            skip_crash = self._skip_crash_after(start)
+        else:
+            t, start = 0.0, 0
+            last_acc = self._eval(srv.params)
+            recs = [SimRecord(0.0, last_acc, 0, 0, 0)]
+        for rnd in range(start + 1, rounds + 1):
             sel = srv.select()
             if not sel:
                 t += self.idle_tick
-                acc = recs[-1].acc
-                recs.append(SimRecord(t, acc, rnd, 0, srv.version))
-                srv.record_accuracy(acc)
+                recs.append(SimRecord(t, last_acc, rnd, 0, srv.version))
+                srv.record_accuracy(last_acc)
+                if self.ckpt and rnd % self.ckpt_every == 0:
+                    self._save_state("sync", rnd, t, last_acc)
                 continue
             finish = 0.0
             budget = max(
@@ -147,58 +282,117 @@ class FLSimulation:
                 plan.append((wid, epochs, self._next_key()))
                 srv.stats[wid].observe(t_one, t_tx)
                 finish = max(finish, dur)
-            responses = self._train_plan(srv.params, plan)
+            responses, diverged = self._train_plan(srv.params, plan)
+            for wid in diverged:
+                srv.note_divergence(wid)
+            responses = self._inject_sync(responses, srv.params, rnd)
             t += finish + self.round_overhead
             srv.sync_aggregate(responses, t)
+            if self.faults is not None and self.faults.server_crashes(rnd) \
+                    and rnd != skip_crash:
+                # killed mid-round: the round's work is lost (no record, no
+                # checkpoint); resume replays it from the last checkpoint
+                return SimResult(recs, srv.params, crashed=True)
             acc = self._eval(srv.params)
+            last_acc = acc
             recs.append(SimRecord(t, acc, rnd, len(sel), srv.version))
             srv.record_accuracy(acc)
+            if self.ckpt and rnd % self.ckpt_every == 0:
+                self._save_state("sync", rnd, t, acc)
             if acc >= target_acc or t >= max_time:
                 break
         return SimResult(recs, srv.params)
 
     # -- asynchronous ----------------------------------------------------
     def run_async(self, max_merges: int, *, max_time: float = np.inf,
-                  target_acc: float = np.inf) -> SimResult:
+                  target_acc: float = np.inf, resume: bool = False
+                  ) -> SimResult:
         srv = self.server
-        t = 0.0
-        recs = [SimRecord(0.0, self._eval(srv.params), 0, 0, 0)]
         heap: list = []
-        seq = 0
-        in_flight: set[int] = set()
+        rejects: dict[int, int] = {}
+        skip_crash = None
+        if resume and self.ckpt is not None and \
+                self.ckpt.latest_step() is not None:
+            st = self._restore_state("async")
+            t, merges, last_acc = st["t"], st["merges"], st["last_acc"]
+            heap, seq, rejects = st["heap"], st["seq"], st["rejects"]
+            recs: list[SimRecord] = []
+            skip_crash = self._skip_crash_after(merges)
+        else:
+            t, merges, seq = 0.0, 0, 0
+            last_acc = self._eval(srv.params)
+            recs = [SimRecord(0.0, last_acc, 0, 0, 0)]
+        # a duplicate re-delivery is not an outstanding dispatch: the live
+        # run never marks it in-flight, so the rebuilt set must not either
+        in_flight: set[int] = {e[2] for e in heap if not e[5]}
 
-        def dispatch(wid: int, now: float):
+        def dispatch(wid: int, now: float, delay: float = 0.0):
             nonlocal seq
             w = self.workers[wid]
             epochs = srv.epochs_for(wid)
             dur, t_one, t_tx = self._duration(w, epochs)
             new_params = w.local_train(srv.params, self._next_key(), epochs)
+            if getattr(w, "diverged", False):
+                srv.note_divergence(wid)
+                return
+            if self.faults is not None:
+                # Byzantine corruption rides the wire; keyed by the unique
+                # dispatch seq so replays inject identically
+                new_params = self.faults.corrupt(new_params, srv.params,
+                                                 wid, seq)
             srv.stats[wid].observe(t_one, t_tx)
-            heapq.heappush(heap, (now + dur, seq, wid, new_params,
-                                  srv.version))
+            heapq.heappush(heap, (now + delay + dur, seq, wid, new_params,
+                                  srv.version, False))
             seq += 1
             in_flight.add(wid)
 
-        for wid in srv.select():
-            dispatch(wid, t)
+        if not heap and not resume:
+            for wid in srv.select():
+                dispatch(wid, t)
 
-        merges = 0
         while merges < max_merges and t < max_time:
             if not heap:  # nobody selected yet (alg-2 cold start, T=0)
                 t += self.idle_tick
-                acc = recs[-1].acc
-                srv.record_accuracy(acc)
-                recs.append(SimRecord(t, acc, merges, 0, srv.version))
+                srv.record_accuracy(last_acc)
+                recs.append(SimRecord(t, last_acc, merges, 0, srv.version))
                 for wid in srv.select():
                     if wid not in in_flight:
                         dispatch(wid, t)
                 continue
-            t_fin, _, wid, w_params, base_version = heapq.heappop(heap)
+            t_fin, sq, wid, w_params, base_version, is_dup = \
+                heapq.heappop(heap)
             in_flight.discard(wid)
             t = max(t, t_fin)
-            srv.async_fold(wid, w_params, base_version, t)
+            if self.faults is not None and not is_dup:
+                fate = self.faults.response_fate(wid, sq)
+                if fate == "drop":
+                    for w2 in srv.select():
+                        if w2 not in in_flight:
+                            dispatch(w2, t)
+                    continue
+                if fate == "duplicate":
+                    # the network re-delivers the same message a beat later
+                    heapq.heappush(heap, (t + self.idle_tick, seq, wid,
+                                          w_params, base_version, True))
+                    seq += 1
+            accepted = srv.async_fold(wid, w_params, base_version, t)
+            if not accepted:
+                # bounded retry with exponential backoff (server policy)
+                rejects[wid] = rejects.get(wid, 0) + 1
+                delay = srv.retry_policy(wid, rejects[wid])
+                if delay is not None and wid not in in_flight:
+                    dispatch(wid, t, delay=delay)
+                for w2 in srv.select():
+                    if w2 not in in_flight:
+                        dispatch(w2, t)
+                continue
             merges += 1
+            if self.faults is not None and \
+                    self.faults.server_crashes(merges) and \
+                    merges != skip_crash:
+                return SimResult(recs, srv.params, crashed=True)
             acc = self._eval(srv.params)
+            last_acc = acc
             recs.append(SimRecord(t, acc, merges, 1, srv.version))
             srv.record_accuracy(acc)
             if acc >= target_acc:
@@ -206,4 +400,10 @@ class FLSimulation:
             for w2 in srv.select():
                 if w2 not in in_flight:
                     dispatch(w2, t)
+            # checkpoint AFTER the re-dispatch: the saved heap must contain
+            # the responses this merge put in flight, or a resumed run
+            # would never see them
+            if self.ckpt and merges % self.ckpt_every == 0:
+                self._save_state("async", merges, t, acc, heap=heap,
+                                 seq=seq, merges=merges, rejects=rejects)
         return SimResult(recs, srv.params)

@@ -1,0 +1,173 @@
+"""Seeded fault injection: deterministic, replayable corruption of the
+federated control plane.
+
+The scenario engines simulate only BENIGN faults (churn, stragglers);
+every update that arrives is folded into the server model unexamined.
+This module is the adversarial/unreliable half: a `FaultPlan` derived
+from a `FaultConfig` makes every fault decision a pure function of
+(seed, worker id, round), so two runs with the same plan inject
+byte-identical faults regardless of call order -- the same counter-based
+RNG discipline `scenarios.shard_for` uses for data shards.
+
+Fault taxonomy (all opt-in, default rates 0):
+
+  * BYZANTINE UPDATES -- a fixed seed-chosen subset of workers ships
+    corrupted weights every time it participates:
+      - ``nan`` / ``inf``  : non-finite entries sprayed into the update
+      - ``sign_flip``      : w' = base - (w - base)   (reflected delta)
+      - ``scale``          : w' = base + s * (w - base), s >> 1
+      - ``noise``          : additive Gaussian noise on the update
+      - ``stale``          : stale-base replay (resends the dispatch base,
+                             i.e. zero progress dressed as a response)
+  * RESPONSE FAULTS -- per (worker, round): drop (message lost) or
+    duplicate (message folded twice; async engines re-deliver).
+  * WORKER CRASH -- per (worker, round): the worker dies mid-round and
+    restarts; its response for the round is lost.
+  * SERVER CRASH -- at configured rounds the aggregation server process
+    is killed mid-round (engines return SimResult(crashed=True) and are
+    expected to resume from the last checkpoint).
+
+Defenses live elsewhere: `aggregation.robust_aggregate*` (trimmed mean /
+median / multi-Krum / norm clipping), the server's sanitization gate
+(`server.AggregationServer`), and round-granular checkpointing in the
+engines.  This module only BREAKS things, deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ATTACKS = ("nan", "inf", "sign_flip", "scale", "noise", "stale")
+
+# domain-separation constants for the counter-based draws
+_BYZ, _ATK, _FATE, _CRASH, _NOISE = 9176, 4391, 5281, 6733, 8269
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Rates and shapes of the injected faults (all per response/round)."""
+    byzantine_frac: float = 0.0          # fixed fraction of Byzantine workers
+    attacks: tuple = ("sign_flip", "scale")   # pool Byzantine workers draw from
+    scale_factor: float = 10.0           # blow-up for the "scale" attack
+    noise_std: float = 1.0               # std for the "noise" attack
+    nonfinite_frac: float = 0.01         # entry fraction hit by nan/inf
+    drop_frac: float = 0.0               # P(response lost) per round
+    duplicate_frac: float = 0.0          # P(response delivered twice)
+    worker_crash_frac: float = 0.0       # P(worker crash-restarts) per round
+    server_crash_rounds: tuple = ()      # rounds where the server is killed
+    seed: int = 0
+
+
+class FaultPlan:
+    """Deterministic fault schedule.  Every method is a pure function of
+    the config seed and its arguments -- replayable, order-independent."""
+
+    def __init__(self, cfg: FaultConfig):
+        for a in cfg.attacks:
+            if a not in ATTACKS:
+                raise ValueError(f"unknown attack '{a}' (have {ATTACKS})")
+        self.cfg = cfg
+
+    # -- decision draws (counter-based, order-independent) -----------------
+    def _rng(self, *key: int) -> np.random.Generator:
+        return np.random.default_rng((self.cfg.seed,) + tuple(
+            int(k) for k in key))
+
+    def is_byzantine(self, wid: int) -> bool:
+        c = self.cfg
+        if c.byzantine_frac <= 0:
+            return False
+        return bool(self._rng(_BYZ, wid).random() < c.byzantine_frac)
+
+    def attack_for(self, wid: int) -> str:
+        atk = self.cfg.attacks
+        return atk[int(self._rng(_ATK, wid).integers(len(atk)))]
+
+    def response_fate(self, wid: int, rnd: int) -> str:
+        """'deliver' | 'drop' | 'duplicate' for this worker's response.
+        A worker crash also loses the response ('drop', crash flavor)."""
+        c = self.cfg
+        if c.worker_crash_frac > 0 and \
+                self._rng(_CRASH, wid, rnd).random() < c.worker_crash_frac:
+            return "drop"
+        u = self._rng(_FATE, wid, rnd).random()
+        if u < c.drop_frac:
+            return "drop"
+        if u < c.drop_frac + c.duplicate_frac:
+            return "duplicate"
+        return "deliver"
+
+    def server_crashes(self, rnd: int) -> bool:
+        return int(rnd) in set(int(r) for r in self.cfg.server_crash_rounds)
+
+    # -- update corruption -------------------------------------------------
+    def corrupt(self, params, base, wid: int, rnd: int):
+        """Byzantine-corrupt one response (pytree) relative to the model
+        `base` it was trained from.  Identity for honest workers."""
+        if not self.is_byzantine(wid):
+            return params
+        attack = self.attack_for(wid)
+        c = self.cfg
+
+        if attack == "stale":
+            return jax.tree.map(lambda b, p: jnp.asarray(b, p.dtype),
+                                base, params)
+
+        def one(p, b, leaf_i):
+            p32 = jnp.asarray(p, jnp.float32)
+            b32 = jnp.asarray(b, jnp.float32)
+            if attack == "sign_flip":
+                out = b32 - (p32 - b32)
+            elif attack == "scale":
+                out = b32 + c.scale_factor * (p32 - b32)
+            elif attack == "noise":
+                rng = self._rng(_NOISE, wid, rnd, leaf_i)
+                out = p32 + jnp.asarray(
+                    rng.normal(0.0, c.noise_std, p.shape), jnp.float32)
+            elif attack in ("nan", "inf"):
+                rng = self._rng(_NOISE, wid, rnd, leaf_i)
+                mask = rng.random(p.shape) < c.nonfinite_frac
+                mask.flat[0] = True          # at least one poisoned entry
+                bad = jnp.float32(jnp.nan if attack == "nan" else jnp.inf)
+                out = jnp.where(jnp.asarray(mask), bad, p32)
+            else:  # pragma: no cover -- attacks validated in __init__
+                raise ValueError(attack)
+            return out.astype(p.dtype)
+
+        leaves, treedef = jax.tree.flatten(params)
+        bleaves = jax.tree.leaves(base)
+        return jax.tree.unflatten(
+            treedef, [one(p, b, i) for i, (p, b)
+                      in enumerate(zip(leaves, bleaves))])
+
+    def corrupt_stacked(self, stacked, base, wids: Sequence[int], rnd: int):
+        """Corrupt members of a stacked (C, ...) cohort tree in place of
+        their leading-axis slices.  `base` is the shared dispatch model
+        (unstacked).  Honest members pass through untouched."""
+        for i, wid in enumerate(wids):
+            if not self.is_byzantine(int(wid)):
+                continue
+            sub = jax.tree.map(lambda x: x[i], stacked)
+            sub = self.corrupt(sub, base, int(wid), rnd)
+            stacked = jax.tree.map(lambda s, c: s.at[i].set(c), stacked, sub)
+        return stacked
+
+    # -- bookkeeping -------------------------------------------------------
+    def byzantine_in(self, wids: Sequence[int]) -> list[int]:
+        return [int(w) for w in wids if self.is_byzantine(int(w))]
+
+
+def finite_members(stacked) -> np.ndarray:
+    """(C,) bool: member i's slice has only finite entries in every leaf.
+    The stacked-engine half of the server's sanitization gate."""
+    ok = None
+    for leaf in jax.tree.leaves(stacked):
+        axes = tuple(range(1, leaf.ndim))
+        l_ok = np.asarray(jnp.all(jnp.isfinite(
+            jnp.asarray(leaf, jnp.float32)), axis=axes))
+        ok = l_ok if ok is None else (ok & l_ok)
+    return ok if ok is not None else np.zeros(0, bool)

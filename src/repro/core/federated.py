@@ -131,6 +131,21 @@ def fl_aggregate_compressed(stacked_params, base_params, mixing, *,
     return jax.tree.map(mix, stacked_params, base_params)
 
 
+def fl_aggregate_robust(stacked_params, method: str, *, base_params=None,
+                        **kw):
+    """Byzantine-robust exchange: every island receives the robust fold of
+    all island models (trimmed mean / median / multi-Krum / norm clipping,
+    see aggregation.ROBUST_METHODS) instead of the mixing-matrix weighted
+    average.  Unlike `fl_aggregate` this is NOT expressible as a
+    row-stochastic mixing matrix -- robustness is exactly the refusal to
+    take fixed linear combinations an attacker could dominate."""
+    agg = aggregation.robust_aggregate_stacked(stacked_params, method,
+                                               base=base_params, **kw)
+    return jax.tree.map(
+        lambda a, s: jnp.broadcast_to(a.astype(s.dtype)[None],
+                                      s.shape), agg, stacked_params)
+
+
 def fl_overlap_merge(params, mixed, snapshot):
     """Re-apply the local progress made WHILE the exchange was in flight.
 

@@ -84,28 +84,66 @@ class FogTopology:
 
 def fog_aggregate_responses(responses: Mapping[int, object],
                             weights: Mapping[int, float],
-                            topology: FogTopology):
+                            topology: FogTopology, *,
+                            robust: str | None = None,
+                            robust_kw: Mapping | None = None):
     """Edge->fog->cloud weighted mean of `responses`.
 
     Each fog cell averages its members with within-cell normalised weights;
     the cloud averages the cell aggregates weighted by each cell's weight
     MASS.  Equals the flat weighted average of all responses (the
-    associativity identity in the module docstring)."""
+    associativity identity in the module docstring).
+
+    With `robust` set (see aggregation.ROBUST_METHODS) each fog cell folds
+    its members with the robust aggregator instead -- a Byzantine worker
+    can then poison at most its own cell's aggregate, and the cloud fold
+    over the (much fewer) cell aggregates runs the SAME robust method, so
+    even a fully captured cell is trimmed/outvoted at the top.  Weighted
+    exactness is deliberately given up: robust statistics are unweighted
+    (see aggregation.robust_aggregate_stacked)."""
     cells = topology.restrict(responses).cells()
     if not cells:
         raise ValueError("no responses to aggregate")
+    kw = dict(robust_kw or {})
     cell_params, cell_mass = [], []
     for members in cells.values():
         w = np.array([max(float(weights[m]), 0.0) for m in members])
         mass = float(w.sum())
         wn = w / mass if mass > 0 else np.full(len(w), 1.0 / len(w))
-        cell_params.append(
-            aggregation.weighted_average([responses[m] for m in members], wn))
+        member_params = [responses[m] for m in members]
+        if robust:
+            cell_params.append(
+                aggregation.robust_aggregate(member_params, robust, **kw))
+        else:
+            cell_params.append(
+                aggregation.weighted_average(member_params, wn))
         cell_mass.append(mass if mass > 0 else 0.0)
+    if robust and len(cell_params) > 1:
+        return aggregation.robust_aggregate(cell_params, robust, **kw)
     mass = np.asarray(cell_mass)
     mn = mass / mass.sum() if mass.sum() > 0 else \
         np.full(len(mass), 1.0 / len(mass))
     return aggregation.weighted_average(cell_params, mn)
+
+
+def hierarchical_robust_aggregate(stacked_params, cell_of: Sequence[int],
+                                  method: str, *, base=None, **kw):
+    """Robust edge->fog->cloud fold of a stacked (P, ...) member tree into
+    ONE aggregate: each cell robust-folds its member slices, the cloud
+    robust-folds the cell aggregates (same method).  The stacked-engine
+    sibling of `fog_aggregate_responses(robust=...)`."""
+    cells = _cells_from_array(cell_of)
+    cell_aggs = []
+    for members in cells.values():
+        sub = jax.tree.map(lambda x: jnp.asarray(x)[np.asarray(members)],
+                           stacked_params)
+        cell_aggs.append(aggregation.robust_aggregate_stacked(
+            sub, method, base=base, **kw))
+    if len(cell_aggs) == 1:
+        return cell_aggs[0]
+    stacked_cells = jax.tree.map(lambda *ls: jnp.stack(ls), *cell_aggs)
+    return aggregation.robust_aggregate_stacked(stacked_cells, method,
+                                                base=base, **kw)
 
 
 # --------------------------------------------------------------------------

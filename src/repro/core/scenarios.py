@@ -15,6 +15,16 @@ This engine splits the two things a federated simulation must produce:
     (`core.hierarchy`).  The cohort stands in for the round's selected set
     the way a survey samples a population.
 
+Adversarial faults ride the same cohort path: with `byzantine_frac` set, a
+seeded `faults.FaultPlan` corrupts the Byzantine members' slices of the
+stacked cohort tree before the fold; non-finite members are rejected by
+the sanitization scan (quarantine counters in `self.quarantine`), and
+`robust_agg` swaps the weighted hierarchical fold for the Byzantine-robust
+one (`hierarchy.hierarchical_robust_aggregate`).  `server_crash_round`
+kills the run mid-round (SimResult.crashed) -- with a CheckpointManager
+attached, `run_sync/run_async(resume=True)` continues from the last
+round-granular checkpoint with a bit-identical SimRecord stream.
+
 Every random draw comes from seeded generators (numpy for the population,
 a split jax key chain for training), so two runs with the same config
 produce IDENTICAL SimRecord sequences -- pinned by tests/test_scenarios.py.
@@ -29,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, federated, hierarchy
+from repro.core import faults as faults_mod
 from repro.core.client import LocalTrainer
 from repro.core.events import SimRecord, SimResult
 from repro.models import build_model
@@ -61,6 +72,15 @@ class ScenarioConfig:
     idle_tick: float = 0.2
     async_base_alpha: float = 0.6
     staleness_scheme: str = "polynomial"
+    # -- faults + defenses (core/faults.py, aggregation.ROBUST_METHODS) --
+    byzantine_frac: float = 0.0    # seed-chosen fraction of corrupt workers
+    byzantine_attacks: tuple = ("sign_flip", "scale")
+    byzantine_scale: float = 10.0  # blow-up for the "scale" attack
+    robust_agg: str = "none"       # none | trimmed_mean | median | krum |
+    #                                norm_clip (hierarchical robust fold)
+    trim_frac: float = 0.2         # trimmed_mean: trim ceil(frac*P)/side
+    server_crash_round: int = 0    # kill the server at this round/merge
+    #                                (0 = never; resume via checkpoints)
     seed: int = 0
 
 
@@ -71,7 +91,8 @@ class ScenarioSim:
     same SimResult record stream."""
 
     def __init__(self, cfg: ScenarioConfig, *, model_cfg: ModelConfig = None,
-                 pool: int = 4096, eval_n: int = 512):
+                 pool: int = 4096, eval_n: int = 512, ckpt=None,
+                 ckpt_every: int = 1):
         from repro.data.synthetic import make_classification_set
         self.cfg = cfg
         self.model = build_model(model_cfg or _DEFAULT_MODEL)
@@ -84,6 +105,21 @@ class ScenarioSim:
         self.n_classes = int(self.pool_y.max()) + 1
         self._class_idx = [np.flatnonzero(self.pool_y == c)
                            for c in range(self.n_classes)]
+        if cfg.robust_agg not in ("none",) + aggregation.ROBUST_METHODS:
+            raise ValueError(f"unknown robust_agg '{cfg.robust_agg}'")
+        if cfg.byzantine_frac > 0 or cfg.server_crash_round > 0:
+            self.faults = faults_mod.FaultPlan(faults_mod.FaultConfig(
+                byzantine_frac=cfg.byzantine_frac,
+                attacks=tuple(cfg.byzantine_attacks),
+                scale_factor=cfg.byzantine_scale,
+                server_crash_rounds=(cfg.server_crash_round,)
+                if cfg.server_crash_round > 0 else (),
+                seed=cfg.seed))
+        else:
+            self.faults = None
+        self.quarantine: dict[int, int] = {}  # wid -> rejected updates
+        self.ckpt = ckpt               # Optional checkpoint.CheckpointManager
+        self.ckpt_every = max(int(ckpt_every), 1)
 
         # -- full-population ground truth (vectorized) -------------------
         n = cfg.n_workers
@@ -137,6 +173,43 @@ class ScenarioSim:
         rs.shuffle(idx)
         return self.pool_x[idx], self.pool_y[idx]
 
+    # -- fault injection + sanitization + fold -----------------------------
+    def _inject_and_sanitize(self, params, stacked, cohort: np.ndarray,
+                             rnd: int):
+        """Corrupt the Byzantine members' slices, then reject (drop +
+        quarantine-count) any member whose slice went non-finite.  Returns
+        (stacked, cohort) restricted to the surviving members -- possibly
+        empty."""
+        stacked = self.faults.corrupt_stacked(stacked, params, cohort, rnd)
+        ok = faults_mod.finite_members(stacked)
+        if ok.all():
+            return stacked, cohort
+        for w in cohort[~ok]:
+            self.quarantine[int(w)] = self.quarantine.get(int(w), 0) + 1
+        keep = np.flatnonzero(ok)
+        if keep.size == 0:
+            return None, cohort[:0]
+        return (jax.tree.map(lambda l: jnp.asarray(l)[keep], stacked),
+                cohort[keep])
+
+    def _fold_cohort(self, params, stacked, cohort: np.ndarray):
+        """Fold the surviving cohort edge->fog->cloud: the robust fold
+        when `robust_agg` is set (unweighted -- see
+        aggregation.robust_aggregate_stacked), the exact weighted
+        hierarchy otherwise."""
+        c = self.cfg
+        cell_of = np.asarray(cohort) % max(1, c.fog_cells)
+        if c.robust_agg != "none":
+            folded = hierarchy.hierarchical_robust_aggregate(
+                stacked, cell_of, c.robust_agg, base=params,
+                trim_frac=c.trim_frac)
+            return jax.tree.map(lambda a, p: jnp.asarray(a, p.dtype),
+                                folded, params)
+        weights = np.full(len(cohort), float(c.samples_per_worker))
+        folded = hierarchy.hierarchical_sync_aggregate(stacked, weights,
+                                                       cell_of)
+        return federated.island_slice(folded, 0)
+
     def _train_cohort(self, params, cohort: np.ndarray, rnd: int):
         """One vmapped batched step over the sampled cohort, folded
         edge->fog->cloud.  Returns the new global params."""
@@ -144,28 +217,101 @@ class ScenarioSim:
         keys = [self._next_key() for _ in cohort]
         stacked = federated.cohort_train(self.trainer, params, shards, keys,
                                          self.cfg.epochs)
-        weights = np.full(len(cohort), float(self.cfg.samples_per_worker))
-        cell_of = np.asarray(cohort) % max(1, self.cfg.fog_cells)
-        folded = hierarchy.hierarchical_sync_aggregate(stacked, weights,
-                                                       cell_of)
-        return federated.island_slice(folded, 0)
+        if self.faults is not None:
+            stacked, cohort = self._inject_and_sanitize(params, stacked,
+                                                        cohort, rnd)
+            if stacked is None:      # whole cohort rejected: no progress
+                return params
+        return self._fold_cohort(params, stacked, cohort)
 
     def _eval(self, params) -> float:
         return self.trainer.evaluate(params, self.test_x, self.test_y)
 
+    # -- crash-safe state --------------------------------------------------
+    def _save_state(self, kind: str, step: int, t: float, last_acc: float,
+                    params, version: int, *, heap=(), members=(),
+                    base_version: int = 0, seq: int = 0, merges: int = 0):
+        if self.ckpt is None:
+            return
+        state = {"key": np.asarray(jax.random.key_data(self.key)),
+                 "alive": self.alive}
+        for i, m in enumerate(members):
+            state[f"m{i}"] = m
+        extra = {"kind": kind, "step": int(step), "t": float(t),
+                 "last_acc": float(last_acc), "version": int(version),
+                 "rng_state": self.rng.bit_generator.state,
+                 "quarantine": {str(k): int(v)
+                                for k, v in self.quarantine.items()},
+                 "heap": [[float(f), int(s), int(w)]
+                          for f, s, w in sorted(heap)],
+                 "n_members": len(members), "base_version": int(base_version),
+                 "seq": int(seq), "merges": int(merges)}
+        self.ckpt.save(step, params=params, opt_state=state, extra=extra)
+
+    def _restore_state(self, kind: str) -> dict:
+        from repro.checkpoint.manager import load_pytree
+        template = self.model.init(jax.random.key(self.cfg.seed))
+        step, params, _, extra = self.ckpt.restore(params_like=template)
+        if extra.get("kind") != kind:
+            raise ValueError(f"checkpoint at step {step} is a "
+                             f"'{extra.get('kind')}' run, not '{kind}'")
+        params = jax.tree.map(jnp.asarray, params)
+        n_members = int(extra.get("n_members", 0))
+        like = {"key": np.asarray(jax.random.key_data(self.key)),
+                "alive": self.alive}
+        for i in range(n_members):
+            like[f"m{i}"] = template
+        state = load_pytree(self.ckpt.path_for(step) / "opt_state.npz", like)
+        self.key = jax.random.wrap_key_data(
+            jnp.asarray(state["key"], np.uint32))
+        self.alive = np.asarray(state["alive"], bool)
+        self.rng.bit_generator.state = extra["rng_state"]
+        self.quarantine = {int(k): int(v) for k, v in
+                           extra.get("quarantine", {}).items()}
+        members = [jax.tree.map(lambda a, l: jnp.asarray(a, l.dtype),
+                                state[f"m{i}"], template)
+                   for i in range(n_members)]
+        heap = [(float(f), int(s), int(w))
+                for f, s, w in extra.get("heap", [])]
+        heapq.heapify(heap)
+        return {"step": step, "params": params, "t": float(extra["t"]),
+                "last_acc": float(extra["last_acc"]),
+                "version": int(extra["version"]), "heap": heap,
+                "members": members,
+                "base_version": int(extra["base_version"]),
+                "seq": int(extra["seq"]), "merges": int(extra["merges"])}
+
+    def _crashes(self, rnd: int, skip: int) -> bool:
+        return self.faults is not None and self.faults.server_crashes(rnd) \
+            and rnd != skip
+
     # -- synchronous -------------------------------------------------------
-    def run_sync(self, rounds: int, *, max_time: float = np.inf) -> SimResult:
+    def run_sync(self, rounds: int, *, max_time: float = np.inf,
+                 resume: bool = False) -> SimResult:
         c = self.cfg
-        params = self.model.init(jax.random.key(c.seed))
-        t = 0.0
-        recs = [SimRecord(0.0, self._eval(params), 0, 0, 0)]
-        version = 0
-        for rnd in range(1, rounds + 1):
+        skip_crash = -1
+        if resume and self.ckpt is not None and \
+                self.ckpt.latest_step() is not None:
+            st = self._restore_state("scen_sync")
+            params, t, start = st["params"], st["t"], st["step"]
+            version, last_acc = st["version"], st["last_acc"]
+            recs: list[SimRecord] = []
+            if c.server_crash_round > start:
+                skip_crash = c.server_crash_round  # the crash that killed us
+        else:
+            params = self.model.init(jax.random.key(c.seed))
+            t, start, version = 0.0, 0, 0
+            last_acc = self._eval(params)
+            recs = [SimRecord(0.0, last_acc, 0, 0, 0)]
+        for rnd in range(start + 1, rounds + 1):
             self._churn()
             sel = self._select()
             if sel.size == 0:
                 t += c.idle_tick
-                recs.append(SimRecord(t, recs[-1].acc, rnd, 0, version))
+                recs.append(SimRecord(t, last_acc, rnd, 0, version))
+                if self.ckpt and rnd % self.ckpt_every == 0:
+                    self._save_state("scen_sync", rnd, t, last_acc, params,
+                                     version)
                 continue
             # straggler barrier over the FULL selected set (vectorized)
             t += float((self.t_one[sel] * c.epochs + self.t_tx[sel]).max()) \
@@ -174,35 +320,52 @@ class ScenarioSim:
                 sel, min(c.cohort_size, sel.size), replace=False))
             params = self._train_cohort(params, cohort, rnd)
             version += 1
-            recs.append(SimRecord(t, self._eval(params), rnd, int(sel.size),
-                                  version))
+            if self._crashes(rnd, skip_crash):
+                # killed mid-round: the round is lost (no record, no
+                # checkpoint); resume replays it from the last checkpoint
+                return SimResult(recs, params, crashed=True)
+            last_acc = self._eval(params)
+            recs.append(SimRecord(t, last_acc, rnd, int(sel.size), version))
+            if self.ckpt and rnd % self.ckpt_every == 0:
+                self._save_state("scen_sync", rnd, t, last_acc, params,
+                                 version)
             if t >= max_time:
                 break
         return SimResult(recs, params)
 
     # -- asynchronous ------------------------------------------------------
-    def run_async(self, max_merges: int, *, max_time: float = np.inf
-                  ) -> SimResult:
+    def run_async(self, max_merges: int, *, max_time: float = np.inf,
+                  resume: bool = False) -> SimResult:
         c = self.cfg
-        params = self.model.init(jax.random.key(c.seed))
-        t = 0.0
-        recs = [SimRecord(0.0, self._eval(params), 0, 0, 0)]
-        version = 0
-
-        sel = self._select()
-        if sel.size == 0:
-            return SimResult(recs, params)
-        finish = t + self.t_one[sel] * c.epochs + self.t_tx[sel]
-        heap = [(float(f), i, int(w)) for i, (f, w) in
-                enumerate(zip(finish, sel))]
-        heapq.heapify(heap)
-        seq = len(heap)
-
-        # quality: a trained generation of cohort members, folded one per
-        # merge with staleness-decayed alpha (the events.py async semantics
-        # at population scale)
-        member_queue: list = []
-        base_version = 0
+        skip_crash = -1
+        if resume and self.ckpt is not None and \
+                self.ckpt.latest_step() is not None:
+            st = self._restore_state("scen_async")
+            params, t, merges = st["params"], st["t"], st["merges"]
+            version, last_acc = st["version"], st["last_acc"]
+            heap, seq = st["heap"], st["seq"]
+            member_queue, base_version = st["members"], st["base_version"]
+            recs: list[SimRecord] = []
+            if c.server_crash_round > merges:
+                skip_crash = c.server_crash_round
+        else:
+            params = self.model.init(jax.random.key(c.seed))
+            t, merges, version = 0.0, 0, 0
+            last_acc = self._eval(params)
+            recs = [SimRecord(0.0, last_acc, 0, 0, 0)]
+            sel = self._select()
+            if sel.size == 0:
+                return SimResult(recs, params)
+            finish = t + self.t_one[sel] * c.epochs + self.t_tx[sel]
+            heap = [(float(f), i, int(w)) for i, (f, w) in
+                    enumerate(zip(finish, sel))]
+            heapq.heapify(heap)
+            seq = len(heap)
+            # quality: a trained generation of cohort members, folded one
+            # per merge with staleness-decayed alpha (the events.py async
+            # semantics at population scale)
+            member_queue = []
+            base_version = 0
 
         def refill(rnd: int):
             nonlocal member_queue, base_version
@@ -215,11 +378,16 @@ class ScenarioSim:
             keys = [self._next_key() for _ in cohort]
             stacked = federated.cohort_train(self.trainer, params, shards,
                                              keys, c.epochs)
+            if self.faults is not None:
+                stacked, cohort = self._inject_and_sanitize(
+                    params, stacked, cohort, rnd)
+                if stacked is None:
+                    member_queue = []
+                    return
             member_queue = [federated.island_slice(stacked, i)
                             for i in range(len(cohort))]
             base_version = version
 
-        merges = 0
         while merges < max_merges and t < max_time and heap:
             t_fin, _, wid = heapq.heappop(heap)
             t = max(t, t_fin)
@@ -236,10 +404,18 @@ class ScenarioSim:
             params = aggregation.async_merge(params, w_params, alpha)
             version += 1
             merges += 1
-            recs.append(SimRecord(t, self._eval(params), merges, 1, version))
+            if self._crashes(merges, skip_crash):
+                return SimResult(recs, params, crashed=True)
+            last_acc = self._eval(params)
+            recs.append(SimRecord(t, last_acc, merges, 1, version))
             if self.alive[wid]:
                 heapq.heappush(
                     heap, (t + float(self.t_one[wid] * c.epochs
                                      + self.t_tx[wid]), seq, wid))
                 seq += 1
+            if self.ckpt and merges % self.ckpt_every == 0:
+                self._save_state("scen_async", merges, t, last_acc, params,
+                                 version, heap=heap, members=member_queue,
+                                 base_version=base_version, seq=seq,
+                                 merges=merges)
         return SimResult(recs, params)

@@ -20,6 +20,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
+from repro.core import aggregation
+from repro.core import faults as faults_mod
 from repro.core import federated as fed
 from repro.data.synthetic import batch_token_stream, make_token_stream
 from repro.launch.steps import make_fl_aggregate, make_fl_train_step
@@ -58,6 +60,17 @@ def main(argv=None):
                          "cells, then across cells (== flat for matching "
                          "weights; core/hierarchy.py)")
     ap.add_argument("--straggler-slack", type=float, default=3.0)
+    ap.add_argument("--byzantine", type=float, default=0.0,
+                    help="fraction of islands that ship corrupted updates "
+                         "into every exchange (seeded faults.FaultPlan)")
+    ap.add_argument("--byzantine-attacks", default="sign_flip,scale",
+                    help="comma list from faults.ATTACKS")
+    ap.add_argument("--byzantine-scale", type=float, default=10.0)
+    ap.add_argument("--robust-agg", default="none",
+                    choices=("none",) + aggregation.ROBUST_METHODS,
+                    help="swap the weighted mixing collective for a "
+                         "Byzantine-robust fold of the island models")
+    ap.add_argument("--trim-frac", type=float, default=0.2)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -77,6 +90,14 @@ def main(argv=None):
     if P > 1:
         params = fed.stack_islands(params, P)
         opt_state = fed.stack_islands(opt_state, P)
+
+    plan = None
+    if args.byzantine > 0 and P > 1:
+        plan = faults_mod.FaultPlan(faults_mod.FaultConfig(
+            byzantine_frac=args.byzantine,
+            attacks=tuple(args.byzantine_attacks.split(",")),
+            scale_factor=args.byzantine_scale, seed=args.seed))
+        print(f"[train] byzantine islands: {plan.byzantine_in(range(P))}")
 
     base_params = jax.tree.map(lambda x: x, params)  # last-sync base
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -134,6 +155,50 @@ def main(argv=None):
             tag += f"+{args.compress}"
         return mixed, tag
 
+    def robust_exchange(cur_params, ok: np.ndarray):
+        """Byzantine-robust fold of the finite island models; every island
+        receives the fold (no mixing matrix an attacker could dominate)."""
+        keep = np.flatnonzero(ok)
+        if keep.size == 0:
+            return None, "no-exchange"
+        sub = jax.tree.map(lambda l: l[np.asarray(keep)], cur_params)
+        kw = dict(trim_frac=args.trim_frac,
+                  base=fed.island_slice(base_params, 0))
+        if args.fog_cells > 1:
+            from repro.core import hierarchy
+            agg_t = hierarchy.hierarchical_robust_aggregate(
+                sub, keep % args.fog_cells, args.robust_agg, **kw)
+        else:
+            agg_t = aggregation.robust_aggregate_stacked(
+                sub, args.robust_agg, **kw)
+        mixed = jax.tree.map(
+            lambda a, l: jnp.broadcast_to(a.astype(l.dtype)[None], l.shape),
+            agg_t, cur_params)
+        return mixed, f"robust-exchange:{args.robust_agg}"
+
+    def exchange_input(cur_params, rnd: int):
+        """What the aggregator SEES: Byzantine islands corrupt their update
+        on the wire (honest islands' local state is never touched)."""
+        if plan is None:
+            return cur_params, np.ones(P, bool)
+        out = cur_params
+        for i in plan.byzantine_in(range(P)):
+            sub = plan.corrupt(fed.island_slice(out, i),
+                               fed.island_slice(base_params, i), i, rnd)
+            out = jax.tree.map(lambda l, c: l.at[i].set(c), out, sub)
+        # sanitization gate: a non-finite update never reaches the fold.
+        # Zero selection weight is NOT enough for the weighted collective
+        # (0 * nan = nan in the tensordot), so the rejected islands'
+        # slices are also replaced by their last-sync base.
+        ok = faults_mod.finite_members(out)
+        if not ok.all():
+            bad = jnp.asarray(~ok)
+            out = jax.tree.map(
+                lambda l, b: jnp.where(
+                    bad.reshape((-1,) + (1,) * (l.ndim - 1)), b, l),
+                out, base_params)
+        return out, ok
+
     pending = None   # (mixed, snapshot) while an overlapped exchange flies
     for s in range(start, args.steps):
         t0 = time.time()
@@ -154,7 +219,11 @@ def main(argv=None):
         loss = np.asarray(metrics["loss"]).mean()
         if (s + 1) % args.local_steps == 0 and P > 1:
             sel = clock.selection(args.straggler_slack)
-            mixed, tag = dispatch_exchange(params, sel)
+            ex_in, ok = exchange_input(params, (s + 1) // args.local_steps)
+            if args.robust_agg != "none":
+                mixed, tag = robust_exchange(ex_in, ok)
+            else:
+                mixed, tag = dispatch_exchange(ex_in, sel * ok)
             if mixed is None:
                 pass
             elif args.overlap and s + 1 < args.steps:

@@ -76,3 +76,50 @@ def test_restore_missing_raises(tmp_path):
     mgr = CheckpointManager(tmp_path)
     with pytest.raises(FileNotFoundError):
         mgr.restore(params_like=tree())
+
+
+def test_overwrite_same_step_keeps_newest(tmp_path):
+    """Re-saving a step (crash-retry of the same round) replaces it and the
+    overwrite has NO crash window: at every point a loadable copy of the
+    step exists as step_X or .old_step_X."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(7, params=tree(1.0))
+    mgr.save(7, params=tree(2.0))
+    assert mgr.all_steps() == [7]
+    _, params, _, _ = mgr.restore(params_like=tree())
+    np.testing.assert_allclose(np.asarray(params["w"], np.float32), 2.0)
+    # no rename-aside garbage after a clean overwrite
+    assert not [p for p in tmp_path.iterdir() if p.name.startswith(".old")]
+
+
+def test_recover_interrupted_overwrite(tmp_path):
+    """Simulate a crash BETWEEN un-publish and re-publish: step_X has been
+    renamed aside to .old_step_X and the new copy never landed.  A fresh
+    manager must restore the old copy -- the previous rmtree-then-replace
+    save() lost the checkpoint in exactly this window."""
+    import os
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    ckpt = mgr.save(3, params=tree(5.0))
+    os.replace(ckpt, tmp_path / ".old_step_0000000003")  # crash mid-overwrite
+    assert CheckpointManager(tmp_path).all_steps() == [3]
+    _, params, _, _ = CheckpointManager(tmp_path).restore(params_like=tree())
+    np.testing.assert_allclose(np.asarray(params["w"], np.float32), 5.0)
+
+
+def test_recover_discards_stale_leftovers(tmp_path):
+    """A .old with a published sibling (crash after publish) and stale .tmp
+    dirs are garbage: _recover deletes both, keeping the published copy."""
+    import shutil
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    ckpt = mgr.save(3, params=tree(9.0))
+    shutil.copytree(ckpt, tmp_path / ".old_step_0000000003")
+    (tmp_path / ".tmp_step_0000000004").mkdir()
+    mgr2 = CheckpointManager(tmp_path)
+    assert mgr2.all_steps() == [3]
+    leftovers = [p.name for p in tmp_path.iterdir()
+                 if p.name.startswith((".old", ".tmp"))]
+    assert leftovers == []
+    _, params, _, _ = mgr2.restore(params_like=tree())
+    np.testing.assert_allclose(np.asarray(params["w"], np.float32), 9.0)

@@ -1,0 +1,209 @@
+"""Fault injection (core/faults.py) + the server's sanitization gate.
+
+  * a FaultPlan is a pure function of (seed, wid, round): replayable and
+    call-order independent;
+  * corruption semantics per attack (sign_flip reflection, scale blow-up,
+    nan/inf spray, stale-base replay);
+  * no injected NaN/Inf ever reaches the published server model -- the
+    gate rejects it and quarantined repeat offenders stop being selected;
+  * async retry/backoff policy is bounded and doubling;
+  * under a sign-flip+scale attack the robust fold beats plain FedAvg
+    (scenario engine, small scale).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.core.cost_model import WorkerStats
+from repro.core.faults import ATTACKS, FaultConfig, FaultPlan, finite_members
+from repro.core.server import AggregationServer, ServerConfig
+
+PARAMS = {"w": jnp.ones((4, 3), jnp.float32), "b": jnp.zeros(5, jnp.float32)}
+BASE = {"w": jnp.full((4, 3), 0.5, jnp.float32),
+        "b": jnp.full((5,), -0.5, jnp.float32)}
+
+
+def plan(**kw):
+    return FaultPlan(FaultConfig(**kw))
+
+
+# ---- determinism / replayability ----------------------------------------
+
+def test_plan_is_replayable_and_order_independent():
+    a = plan(byzantine_frac=0.3, drop_frac=0.2, duplicate_frac=0.1, seed=5)
+    b = plan(byzantine_frac=0.3, drop_frac=0.2, duplicate_frac=0.1, seed=5)
+    # query b in reverse order: decisions must not depend on call order
+    fwd = [(a.is_byzantine(w), a.attack_for(w), a.response_fate(w, r))
+           for w in range(20) for r in range(5)]
+    rev = [(b.is_byzantine(w), b.attack_for(w), b.response_fate(w, r))
+           for w in reversed(range(20)) for r in reversed(range(5))]
+    assert fwd == list(reversed(rev))
+
+
+def test_different_seeds_differ():
+    marks = [tuple(plan(byzantine_frac=0.5, seed=s).is_byzantine(w)
+                   for w in range(32)) for s in range(4)]
+    assert len(set(marks)) > 1
+
+
+def test_corrupt_is_identity_for_honest_workers():
+    p = plan(byzantine_frac=0.0)
+    out = p.corrupt(PARAMS, BASE, wid=1, rnd=0)
+    assert out is PARAMS
+
+
+def _corrupted(attack, **kw):
+    p = plan(byzantine_frac=1.0, attacks=(attack,), **kw)
+    assert p.is_byzantine(3)
+    return p.corrupt(PARAMS, BASE, wid=3, rnd=2)
+
+
+def test_sign_flip_reflects_the_delta():
+    out = _corrupted("sign_flip")
+    np.testing.assert_allclose(
+        np.asarray(out["w"]), 2 * np.asarray(BASE["w"])
+        - np.asarray(PARAMS["w"]), rtol=1e-6)
+
+
+def test_scale_blows_up_the_delta():
+    out = _corrupted("scale", scale_factor=7.0)
+    want = np.asarray(BASE["w"]) + 7.0 * (np.asarray(PARAMS["w"])
+                                          - np.asarray(BASE["w"]))
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("attack", ["nan", "inf"])
+def test_nonfinite_attacks_poison_at_least_one_entry(attack):
+    out = _corrupted(attack)
+    assert not aggregation.tree_finite(out)
+    # replay injects the identical mask
+    again = _corrupted(attack)
+    np.testing.assert_array_equal(
+        np.isfinite(np.asarray(out["w"])),
+        np.isfinite(np.asarray(again["w"])))
+
+
+def test_stale_replays_the_dispatch_base():
+    out = _corrupted("stale")
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(BASE["w"]))
+
+
+def test_unknown_attack_rejected():
+    with pytest.raises(ValueError):
+        plan(attacks=("gradient_surgery",))
+    assert set(ATTACKS) >= {"nan", "inf", "sign_flip", "scale"}
+
+
+def test_corrupt_stacked_matches_per_member_corrupt():
+    p = plan(byzantine_frac=0.5, attacks=("sign_flip",), seed=9)
+    stacked = jax.tree.map(
+        lambda l: jnp.stack([l * (i + 1) for i in range(4)]), PARAMS)
+    wids = [10, 11, 12, 13]
+    out = p.corrupt_stacked(stacked, BASE, wids, rnd=1)
+    for i, w in enumerate(wids):
+        member = jax.tree.map(lambda l: l[i], stacked)
+        want = p.corrupt(member, BASE, w, 1)
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(jax.tree.map(lambda l: l[i], out))[0]),
+            np.asarray(jax.tree.leaves(want)[0]), rtol=1e-6)
+
+
+def test_finite_members_flags_only_bad_slices():
+    stacked = jax.tree.map(lambda l: jnp.stack([l] * 3), PARAMS)
+    stacked["w"] = stacked["w"].at[1, 0, 0].set(jnp.nan)
+    np.testing.assert_array_equal(finite_members(stacked),
+                                  [True, False, True])
+
+
+def test_server_crash_schedule():
+    p = plan(server_crash_rounds=(3, 7))
+    assert [r for r in range(10) if p.server_crashes(r)] == [3, 7]
+
+
+# ---- the server-side gate ------------------------------------------------
+
+def make_server(**cfg_kw):
+    stats = {w: WorkerStats(wid=w, t_one=0.1, t_transmit=0.05, n_data=64)
+             for w in range(4)}
+    return AggregationServer(
+        {"w": jnp.zeros((3, 2), jnp.float32)}, stats,
+        ServerConfig(policy="all", **cfg_kw), seed=0)
+
+
+def test_sanitize_sync_rejects_nonfinite_and_outliers():
+    srv = make_server(norm_outlier_mult=3.0)
+    good = {"w": jnp.full((3, 2), 0.1, jnp.float32)}
+    responses = {0: good, 1: good,
+                 2: {"w": jnp.full((3, 2), jnp.nan)},
+                 3: {"w": jnp.full((3, 2), 1e4, jnp.float32)}}
+    out = srv.sanitize_sync(responses)
+    assert sorted(out) == [0, 1]
+    assert srv.quarantine == {2: 1, 3: 1}
+    assert [w for _, w, _ in srv.rejections] == [2, 3]
+
+
+def test_no_injected_nonfinite_reaches_published_model():
+    srv = make_server()
+    poisoned = {0: {"w": jnp.full((3, 2), 0.1, jnp.float32)},
+                1: {"w": jnp.full((3, 2), jnp.inf)}}
+    srv.sync_aggregate(poisoned, sim_time=1.0)
+    assert aggregation.tree_finite(srv.params)
+    assert not srv.async_fold(1, {"w": jnp.full((3, 2), jnp.nan)}, 0, 2.0)
+    assert aggregation.tree_finite(srv.params)
+
+
+def test_quarantined_workers_leave_the_selection_pool():
+    srv = make_server(quarantine_threshold=2)
+    assert sorted(srv.select()) == [0, 1, 2, 3]
+    srv.note_divergence(2)
+    assert sorted(srv.select()) == [0, 1, 2, 3]   # one strike: still in
+    srv.note_divergence(2)
+    assert sorted(srv.select()) == [0, 1, 3]      # benched at threshold
+
+
+def test_retry_policy_is_bounded_and_doubling():
+    srv = make_server(max_retries=3, retry_backoff=0.5)
+    assert [srv.retry_policy(0, n) for n in (1, 2, 3)] == [0.5, 1.0, 2.0]
+    assert srv.retry_policy(0, 4) is None         # bounded
+    for _ in range(srv.cfg.quarantine_threshold):
+        srv.note_divergence(1)
+    assert srv.retry_policy(1, 1) is None         # quarantined: no retry
+
+
+def test_async_ewma_norm_gate():
+    srv = make_server(norm_outlier_mult=2.0)
+    small = {"w": jnp.full((3, 2), 0.01, jnp.float32)}
+    assert srv.sanitize_async(0, small)           # seeds the EWMA
+    assert not srv.sanitize_async(1, {"w": jnp.full((3, 2), 50.0,
+                                                    jnp.float32)})
+    assert srv.quarantine.get(1) == 1
+
+
+# ---- end-to-end: robust fold beats plain FedAvg under attack -------------
+
+def test_robust_beats_fedavg_under_attack():
+    from repro.core.scenarios import ScenarioConfig, ScenarioSim
+    base = dict(n_workers=120, cohort_size=10, fog_cells=1,
+                participation=0.25, samples_per_worker=96, epochs=2,
+                byzantine_frac=0.2, byzantine_scale=10.0, seed=3)
+    attacked = ScenarioSim(ScenarioConfig(**base), pool=1024,
+                           eval_n=256).run_sync(8)
+    robust = ScenarioSim(ScenarioConfig(**base, robust_agg="trimmed_mean",
+                                        trim_frac=0.3), pool=1024,
+                         eval_n=256).run_sync(8)
+    assert robust.best_acc >= attacked.best_acc
+    assert aggregation.tree_finite(robust.final_params)
+
+
+def test_scenario_nan_attack_never_reaches_model():
+    from repro.core.scenarios import ScenarioConfig, ScenarioSim
+    cfg = ScenarioConfig(n_workers=40, cohort_size=6, fog_cells=2,
+                         participation=0.4, samples_per_worker=32,
+                         byzantine_frac=0.5,
+                         byzantine_attacks=("nan", "inf"), seed=1)
+    sim = ScenarioSim(cfg, pool=256, eval_n=128)
+    res = sim.run_sync(3)
+    assert aggregation.tree_finite(res.final_params)
+    assert sim.quarantine                         # rejections were counted

@@ -1,0 +1,122 @@
+"""Property tests for the Byzantine-robust aggregators (core/aggregation.py).
+
+  * permutation invariance: member order never changes the fold;
+  * degenerate agreement: identical updates come back unchanged, and
+    trim_frac=0 trimmed mean == the uniform mean;
+  * breakdown bound: with f corrupt members at arbitrary magnitude and a
+    matched trim/krum budget, the fold stays inside the honest members'
+    coordinate-wise envelope (trimmed/median/krum) or norm ball (norm_clip).
+Driven by hypothesis when installed, else the deterministic fallback shim.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+
+members_st = st.integers(min_value=3, max_value=9)
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make_members(P: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+            for _ in range(P)]
+
+
+def flat(tree) -> np.ndarray:
+    return np.concatenate([np.asarray(l, np.float32).ravel()
+                           for l in jax.tree.leaves(tree)])
+
+
+BASE = {"w": jnp.zeros((3, 2), jnp.float32), "b": jnp.zeros(4, jnp.float32)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(members_st, seed_st, st.sampled_from(agg.ROBUST_METHODS))
+def test_permutation_invariance(P, seed, method):
+    ms = make_members(P, seed)
+    perm = np.random.default_rng(seed + 1).permutation(P)
+    a = agg.robust_aggregate(ms, method, base=BASE)
+    b = agg.robust_aggregate([ms[i] for i in perm], method, base=BASE)
+    np.testing.assert_allclose(flat(a), flat(b), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(members_st, seed_st, st.sampled_from(agg.ROBUST_METHODS))
+def test_identical_updates_pass_through(P, seed, method):
+    one = make_members(1, seed)[0]
+    out = agg.robust_aggregate([one] * P, method, base=BASE)
+    np.testing.assert_allclose(flat(out), flat(one), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(members_st, seed_st)
+def test_trim_zero_equals_uniform_mean(P, seed):
+    ms = make_members(P, seed)
+    out = agg.robust_aggregate(ms, "trimmed_mean", trim_frac=0.0)
+    mean = np.mean([flat(m) for m in ms], axis=0)
+    np.testing.assert_allclose(flat(out), mean, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=5, max_value=11), seed_st,
+       st.sampled_from(("trimmed_mean", "median", "krum")))
+def test_breakdown_bound_with_f_corrupt(P, seed, method):
+    """f = floor((P-1)/4) corrupt members at huge magnitude cannot pull the
+    fold outside the honest coordinate-wise envelope (trimmed/median) or
+    honest selection (krum with a matched f budget)."""
+    f = max(1, (P - 1) // 4)
+    ms = make_members(P, seed)
+    big = 1e6
+    for i in range(f):
+        ms[i] = jax.tree.map(lambda l: l * 0 + big, ms[i])
+    honest = np.stack([flat(m) for m in ms[f:]])
+    out = flat(agg.robust_aggregate(
+        ms, method, trim_frac=f / P, krum_f=f))
+    lo, hi = honest.min(axis=0), honest.max(axis=0)
+    assert np.all(out >= lo - 1e-4) and np.all(out <= hi + 1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=3, max_value=9), seed_st,
+       st.floats(min_value=1.0, max_value=4.0))
+def test_norm_clip_bounds_the_fold(P, seed, clip_mult):
+    """After clipping, every member's delta norm is <= clip_mult x the
+    median norm, so the weighted mean's delta norm is too."""
+    ms = make_members(P, seed)
+    ms[0] = jax.tree.map(lambda l: l * 1e5, ms[0])  # one runaway update
+    norms = [agg.delta_norm(m, BASE) for m in ms]
+    thr = clip_mult * float(np.median(norms))
+    out = agg.robust_aggregate(ms, "norm_clip", base=BASE,
+                               clip_mult=clip_mult)
+    assert agg.delta_norm(out, BASE) <= thr + 1e-3
+
+
+def test_trim_k_clamps():
+    assert agg.trim_k(5, 0.2) == 1
+    assert agg.trim_k(5, 0.5) == 2      # clamped: >= 1 survivor
+    assert agg.trim_k(3, 0.9) == 1
+    assert agg.trim_k(10, 0.0) == 0
+
+
+def test_krum_excludes_far_outliers():
+    rng = np.random.default_rng(0)
+    ms = [{"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+          for _ in range(6)]
+    ms.append({"w": jnp.full((4,), 1e6, jnp.float32)})
+    sel = agg.krum_select(agg._stack_trees(ms), f=1)
+    assert 6 not in sel                 # the outlier is never selected
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        agg.robust_aggregate(make_members(3, 0), "no_such_method")
