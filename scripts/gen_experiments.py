@@ -52,11 +52,16 @@ def sweep_summary() -> str:
 
 
 def layout_table() -> str:
-    out = ["| arch | shape | mesh | layout | fits | peak GB/dev | "
+    out = ["| arch | shape | mesh | layout | cache | fits | peak GB/dev | "
            "headroom GB | stationary | hybrid | fsdp | why |\n",
-           "|---|---|---|---|---|---|---|---|---|---|---|\n"]
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n"]
     n_cells = n_fit = 0
     cap_gb = None
+
+    def ckey(c):
+        return (c["layout"] + (f"+{c['cache']}" if c.get("cache") else "")
+                + ("+chunked" if c.get("chunked") else ""))
+
     for mesh in ("single", "multi"):
         for rec in R.load_cells(mesh):
             ld = rec.get("layout_decision")
@@ -65,18 +70,32 @@ def layout_table() -> str:
             n_cells += 1
             n_fit += bool(ld["fits"])
             cap_gb = ld["budget_gb"] * ld["margin"]
-            cand = {c["layout"]: c for c in ld["candidates"]}
-            peak = {k: f"{c['hbm_gb']:.2f}" for k, c in cand.items()}
+            # per-layout columns show the BASELINE (config-spec) probes;
+            # a spec'd rescue appears in the cache column + chosen peak
+            base_cand = {c["layout"]: c for c in ld["candidates"]
+                         if not c.get("cache") and not c.get("chunked")}
+            peak = {k: f"{c['hbm_gb']:.2f}" for k, c in base_cand.items()}
             chosen = ld["layout"]
-            for k in peak:
-                if k == chosen:
-                    peak[k] = f"**{peak[k]}**"
-            why = ("fastest feasible step" if ld["fits"]
+            dkey = (chosen + (f"+{ld['cache_spec']}"
+                              if ld.get("cache_spec") else "")
+                    + ("+chunked" if ld.get("chunked") else ""))
+            chosen_c = next((c for c in ld["candidates"] if ckey(c) == dkey),
+                            base_cand.get(chosen))
+            cache_cell = (ld.get("cache_spec") or "--") + \
+                (" +chunked" if ld.get("chunked") else "")
+            if not ld.get("cache_spec"):
+                for k in peak:
+                    if k == chosen:
+                        peak[k] = f"**{peak[k]}**"
+            why = ("rescued: spec'd cache" if ld["fits"]
+                   and ld.get("cache_spec")
+                   else "fastest feasible step" if ld["fits"]
                    else "nothing fits; min peak")
             out.append(
                 f"| {rec['arch']} | {rec['shape']} | {mesh} | "
-                f"**{chosen}** | {'yes' if ld['fits'] else 'NO'} | "
-                f"{cand[chosen]['hbm_gb']:.2f} | {ld['headroom_gb']:.2f} | "
+                f"**{chosen}** | {cache_cell} | "
+                f"{'yes' if ld['fits'] else 'NO'} | "
+                f"{chosen_c['hbm_gb']:.2f} | {ld['headroom_gb']:.2f} | "
                 f"{peak.get('stationary', '--')} | "
                 f"{peak.get('hybrid', '--')} | {peak.get('fsdp', '--')} | "
                 f"{why} |\n")

@@ -168,6 +168,35 @@ def decompress_tree(ctree):
     return jax.tree.map(one, ctree, is_leaf=_is_cleaf)
 
 
+def roundtrip_islands(stacked, base, *, mode: str = "q8",
+                      block: int = 256, k_frac: float = 0.05):
+    """Round-trip every island's delta-from-base through the compressed
+    wire: leaves are stacked (P, ...), and each island's delta is
+    compressed/decompressed INDEPENDENTLY (per-island payloads -- top-k
+    selection and block scales never straddle island boundaries, exactly
+    like the real wire).  Returns the reconstructed stacked tree, i.e.
+    base + decode(encode(member - base)) per island.
+
+    This is what a robust aggregator must fold (and what its
+    finite/quarantine gate must threshold): the DECOMPRESSED deltas are
+    what actually reaches the aggregator, not the members' full-precision
+    local weights (launch/train.py --robust-agg x --compress)."""
+    P = jax.tree.leaves(stacked)[0].shape[0]
+    outs = []
+    for i in range(P):
+        pi = jax.tree.map(lambda l: l[i], stacked)
+        bi = jax.tree.map(lambda l: l[i], base)
+        delta = jax.tree.map(
+            lambda p, b: p.astype(jnp.float32) - b.astype(jnp.float32),
+            pi, bi)
+        delta = decompress_tree(compress_tree(delta, mode=mode,
+                                              block=block, k_frac=k_frac))
+        outs.append(jax.tree.map(
+            lambda b, d: (b.astype(jnp.float32) + d).astype(b.dtype),
+            bi, delta))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
 def compressed_bytes(tree, *, mode: str = "q8", block: int = 256,
                      k_frac: float = 0.05) -> int:
     """Bytes on the wire for the compressed form.  `block`/`k_frac` must

@@ -19,6 +19,15 @@ first):
   fsdp       -- DEFAULT_RULES: fully-sharded weights (the training
                 layout); always fits, pays weight all-gathers per step.
 
+Since the CacheSpec layer (models/cache.py) the policy scores the full
+(weight layout x cache spec) PRODUCT for serve cells: each weight layout
+is paired with every CACHE_SPEC_CANDIDATES entry (head/bf16, ring/bf16,
+head/int8, ring/int8), plus chunked-prefill variants for long-prompt
+prefill cells.  int8 cache reads are charged at bf16-equivalent bytes in
+the step-time proxy, so quantization is a FIT tool (smaller residency)
+rather than a modeled speed win, and the historical head/bf16 convention
+wins whenever it fits.
+
 Decision procedure (`decide`): every candidate gets a CandidateEval with
 predicted peak per-device HBM and predicted step time.  A candidate is
 FEASIBLE when `hbm_bytes <= DEVICE_HBM_BYTES * margin` (margin defaults to
@@ -65,17 +74,35 @@ DEFAULT_MARGIN = 0.9
 
 @dataclasses.dataclass(frozen=True)
 class CandidateEval:
-    """Predicted peak HBM + step time for one layout candidate."""
+    """Predicted peak HBM + step time for one (weight layout x cache
+    spec) candidate.  `cache` is a models/cache.CacheSpec name
+    ("ring/int8", ...; "" = the model's default spec / no cache);
+    `chunked` marks the chunked-prefill variant that streams a long
+    prompt through bounded chunks instead of one-shot prefill."""
     layout: str
     hbm_bytes: float          # peak per-device HBM the program needs
     step_time_s: float        # predicted step time (roofline bound)
     source: str = "analytic"  # "xla" (compiled memory_analysis) | "analytic"
     detail: dict = dataclasses.field(default_factory=dict)
+    cache: str = ""
+    chunked: bool = False
+
+    @property
+    def key(self) -> str:
+        """Unique candidate id: layout[+cache][+chunked]."""
+        k = self.layout
+        if self.cache:
+            k += f"+{self.cache}"
+        if self.chunked:
+            k += "+chunked"
+        return k
 
     def as_dict(self) -> dict:
         return {"layout": self.layout, "hbm_bytes": self.hbm_bytes,
                 "hbm_gb": round(self.hbm_bytes / 1e9, 3),
                 "step_time_s": self.step_time_s, "source": self.source,
+                **({"cache": self.cache} if self.cache else {}),
+                **({"chunked": True} if self.chunked else {}),
                 **({"detail": self.detail} if self.detail else {})}
 
 
@@ -93,7 +120,8 @@ def peak_hbm_bytes(memory_analysis: dict) -> float:
 
 
 def eval_from_compiled(layout: str, memory_analysis: dict,
-                       roofline: dict) -> CandidateEval:
+                       roofline: dict, *, cache: str = "",
+                       chunked: bool = False) -> CandidateEval:
     """CandidateEval from dryrun-grade numbers (XLA memory_analysis +
     hlo_cost roofline dict with a `bound_s` key)."""
     return CandidateEval(
@@ -101,7 +129,8 @@ def eval_from_compiled(layout: str, memory_analysis: dict,
         hbm_bytes=peak_hbm_bytes(memory_analysis),
         step_time_s=float(roofline.get("bound_s", 0.0)),
         source="xla",
-        detail={"memory_analysis": dict(memory_analysis)})
+        detail={"memory_analysis": dict(memory_analysis)},
+        cache=cache, chunked=chunked)
 
 
 # ---------------------------------------------------------------------------
@@ -130,16 +159,60 @@ def sharded_bytes(defs, mesh, rules) -> float:
     return total
 
 
+#: Tokens per chunk of the chunked-prefill variant (matches the chunk
+#: size launch/dryrun.py compiles for long-prompt cells).
+CHUNK_TOKENS = 4096
+
+#: CacheSpec candidates the serve policy sweeps per weight layout, in
+#: preference order: the historical head-sharded bf16 convention first,
+#: then seq-sharded ring, then the int8 variants (a FIT tool, not a
+#: modeled speed win -- int8 cache reads are charged at bf16-equivalent
+#: bytes so bf16 wins whenever both fit).
+CACHE_SPEC_CANDIDATES = ("head/bf16", "ring/bf16", "head/int8", "ring/int8")
+
+
+def _cache_bytes(model, shape, mesh, rules, cache_spec):
+    """(resident_bytes, stream_bytes) of the decode/prefill cache under
+    `cache_spec` ("" / None = the model's config default).  stream_bytes
+    is what the attention must move per step, charged at bf16 width even
+    for int8 caches (dequant runs at full width in-register; quantizing
+    shrinks RESIDENCY, which is the fit story, not arithmetic traffic)."""
+    if shape.kind not in ("decode", "prefill") or model._cache_defs is None:
+        return 0.0, 0.0
+    B, S = shape.global_batch, shape.seq_len
+    if cache_spec and model.supports_cache_spec:
+        from repro.models.cache import CacheSpec
+        spec = CacheSpec.parse(cache_spec)
+        resident = sharded_bytes(model.cache_defs(B, S, spec=spec),
+                                 mesh, rules)
+        if spec.quantized:
+            bf16 = dataclasses.replace(spec, dtype="bf16")
+            stream = sharded_bytes(model.cache_defs(B, S, spec=bf16),
+                                   mesh, rules)
+        else:
+            stream = resident
+        return resident, stream
+    resident = sharded_bytes(model.cache_defs(B, S), mesh, rules)
+    return resident, resident
+
+
 def analytic_eval(model, shape, mesh, layout: str, *,
+                  cache_spec: str | None = None, chunked: bool = False,
                   hbm_bw: float | None = None) -> CandidateEval:
     """Compile-free CandidateEval: param/cache/input bytes from the
-    ParamDef tree resolved through the layout's RuleSet, plus a 2-deep
-    activation workspace, with a weight/cache-streaming step-time proxy.
+    ParamDef tree resolved through the (layout, cache_spec) candidate's
+    RuleSet, plus a 2-deep activation workspace, with a
+    weight/cache-streaming step-time proxy.
 
     The step-time proxy charges every byte the device must READ each step
     (stationary weights stream from local HBM; fsdp weights must first be
     gathered -- charged at ICI bandwidth, which is what makes stationary
-    win whenever it fits).
+    win whenever it fits).  Prefill counts the produced cache against
+    peak too: the one-shot prefill entry RETURNS the cache, and outputs
+    don't alias any argument there.  `chunked` models the chunked-prefill
+    variant: peak activations shrink to one CHUNK_TOKENS chunk, but the
+    weights stream once per chunk, so one-shot prefill stays preferred
+    whenever it fits.
     """
     from repro.dist.hlo_analysis import HBM_BW, ICI_BW
     hbm_bw = hbm_bw or HBM_BW
@@ -148,31 +221,45 @@ def analytic_eval(model, shape, mesh, layout: str, *,
 
     p_bytes = sharded_bytes(model.param_defs(), mesh, rules)
     in_bytes = sharded_bytes(model.input_defs(shape), mesh, rules)
-    c_bytes = 0.0
-    if shape.kind == "decode":
-        c_bytes = sharded_bytes(
-            model.cache_defs(shape.global_batch, shape.seq_len), mesh, rules)
+    c_bytes, c_stream = _cache_bytes(model, shape, mesh, rules, cache_spec)
+    if shape.kind == "prefill" and not cache_spec:
+        # historical baseline: prefill peak modeled without the cache
+        # output (kept so the default 3-layout table is stable); product
+        # candidates carry a cache_spec and count it.
+        c_bytes = c_stream = 0.0
     # activation workspace: ~2 live (tokens/dev, d_model) bf16 copies
     sizes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
     data_deg = sizes.get("data", 1) * sizes.get("pod", 1)
     toks = shape.global_batch * (1 if shape.kind == "decode" else
                                  shape.seq_len)
-    act_bytes = 2.0 * (toks / max(data_deg, 1)) * \
+    n_chunks = 1
+    peak_toks = toks
+    if chunked:
+        n_chunks = max(1, math.ceil(shape.seq_len / CHUNK_TOKENS))
+        peak_toks = shape.global_batch * min(CHUNK_TOKENS, shape.seq_len)
+    act_peak = 2.0 * (peak_toks / max(data_deg, 1)) * \
+        getattr(model.cfg, "d_model", 1) * 2
+    act_total = 2.0 * (toks / max(data_deg, 1)) * \
         getattr(model.cfg, "d_model", 1) * 2
 
     # weight bytes that must be gathered per step to run stationary-style
-    # compute (0 for stationary by construction)
+    # compute (0 for stationary by construction); chunked prefill streams
+    # (and re-gathers) the weights once per chunk.
     p_stationary = sharded_bytes(model.param_defs(), mesh, stationary)
     gather_bytes = max(p_stationary - p_bytes, 0.0)
-    step = (p_bytes + c_bytes + act_bytes) / hbm_bw + gather_bytes / ICI_BW
+    step = (p_bytes * n_chunks + c_stream + act_total) / hbm_bw \
+        + gather_bytes * n_chunks / ICI_BW
     return CandidateEval(
         layout=layout,
-        hbm_bytes=p_bytes + c_bytes + in_bytes + act_bytes,
+        hbm_bytes=p_bytes + c_bytes + in_bytes + act_peak,
         step_time_s=step,
         source="analytic",
         detail={"param_bytes": p_bytes, "cache_bytes": c_bytes,
-                "activation_bytes": act_bytes,
-                "gather_bytes_per_step": gather_bytes})
+                "cache_stream_bytes": c_stream,
+                "activation_bytes": act_peak,
+                "gather_bytes_per_step": gather_bytes,
+                "n_chunks": n_chunks},
+        cache=cache_spec or "", chunked=chunked)
 
 
 # ---------------------------------------------------------------------------
@@ -181,24 +268,41 @@ def analytic_eval(model, shape, mesh, layout: str, *,
 
 @dataclasses.dataclass(frozen=True)
 class LayoutDecision:
-    """The chosen layout plus the full per-candidate scoring table."""
+    """The chosen (layout, cache_spec, chunked) plus the full
+    per-candidate scoring table.  `cache_spec`/`chunked` default to
+    ""/False so pre-CacheSpec decisions (and tests constructing the
+    dataclass positionally) keep working."""
     layout: str
     fits: bool                      # chosen candidate under budget*margin?
     budget_bytes: float
     margin: float
     evals: tuple                    # CandidateEval, in evaluation order
     reason: str
+    cache_spec: str = ""            # "" = the model's config default
+    chunked: bool = False
 
     @property
     def rules(self):
         return serve_layout_rules(self.layout)
 
     @property
+    def key(self) -> str:
+        k = self.layout
+        if self.cache_spec:
+            k += f"+{self.cache_spec}"
+        if self.chunked:
+            k += "+chunked"
+        return k
+
+    @property
     def chosen(self) -> CandidateEval:
         for e in self.evals:
+            if e.key == self.key:
+                return e
+        for e in self.evals:           # pre-CacheSpec decision records
             if e.layout == self.layout:
                 return e
-        raise KeyError(self.layout)
+        raise KeyError(self.key)
 
     def headroom_bytes(self, e: CandidateEval | None = None) -> float:
         e = e or self.chosen
@@ -207,6 +311,8 @@ class LayoutDecision:
     def as_dict(self) -> dict:
         return {
             "layout": self.layout, "fits": self.fits,
+            **({"cache_spec": self.cache_spec} if self.cache_spec else {}),
+            **({"chunked": True} if self.chunked else {}),
             "budget_gb": round(self.budget_bytes / 1e9, 2),
             "margin": self.margin,
             "headroom_gb": round(self.headroom_bytes() / 1e9, 3),
@@ -219,8 +325,9 @@ def decide(evals, *, budget_bytes: float = DEVICE_HBM_BYTES,
            margin: float = DEFAULT_MARGIN) -> LayoutDecision:
     """Headroom-aware scoring: feasible = peak HBM <= budget*margin; the
     fastest feasible candidate wins (ties: first in `evals` order, which
-    callers pass most-stationary-first).  With no feasible candidate the
-    smallest peak wins and `fits=False` (huge-MoE fallback)."""
+    callers pass most-stationary-first, default-cache-first).  With no
+    feasible candidate the smallest peak wins and `fits=False` (huge-MoE
+    fallback)."""
     evals = tuple(evals)
     if not evals:
         raise ValueError("no candidate evaluations")
@@ -228,20 +335,22 @@ def decide(evals, *, budget_bytes: float = DEVICE_HBM_BYTES,
     feasible = [e for e in evals if e.hbm_bytes <= cap]
     if feasible:
         best = min(feasible, key=lambda e: e.step_time_s)
-        reason = (f"{best.layout}: peak {best.hbm_bytes/1e9:.2f} GB <= "
+        reason = (f"{best.key}: peak {best.hbm_bytes/1e9:.2f} GB <= "
                   f"{cap/1e9:.2f} GB budget "
                   f"(headroom {(cap-best.hbm_bytes)/1e9:.2f} GB), fastest "
                   f"feasible step {best.step_time_s:.3g}s of "
                   f"{len(feasible)}/{len(evals)} feasible")
         return LayoutDecision(best.layout, True, budget_bytes, margin,
-                              evals, reason)
+                              evals, reason, cache_spec=best.cache,
+                              chunked=best.chunked)
     best = min(evals, key=lambda e: e.hbm_bytes)
     reason = (f"no layout fits under {cap/1e9:.2f} GB "
               f"({margin:.0%} of {budget_bytes/1e9:.0f} GB); falling back "
-              f"to min-peak {best.layout} at {best.hbm_bytes/1e9:.2f} GB "
+              f"to min-peak {best.key} at {best.hbm_bytes/1e9:.2f} GB "
               f"(over by {(best.hbm_bytes-cap)/1e9:.2f} GB)")
     return LayoutDecision(best.layout, False, budget_bytes, margin,
-                          evals, reason)
+                          evals, reason, cache_spec=best.cache,
+                          chunked=best.chunked)
 
 
 def choose_serve_layout(evaluate, *, layouts=None,
@@ -254,10 +363,43 @@ def choose_serve_layout(evaluate, *, layouts=None,
                   budget_bytes=budget_bytes, margin=margin)
 
 
+def serve_product_candidates(model, shape):
+    """(layout, cache_spec, chunked) product candidates for one serve
+    cell, in preference order: layouts most-stationary-first; within a
+    layout the historical head/bf16 convention first, exotic specs after;
+    chunked-prefill variants last (they pay n_chunks weight re-reads).
+
+    Cache specs only enter the product for cells that HAVE a spec'able
+    cache (decode/prefill on transformer families).  Chunked prefill is
+    excluded for VLM-stub models (the patch_embeds prefix assumes
+    one-shot prefill) and enc-dec archs (cross-attention frames)."""
+    has_cache = (shape.kind in ("decode", "prefill")
+                 and model._cache_defs is not None
+                 and model.supports_cache_spec)
+    chunk_ok = (shape.kind == "prefill" and has_cache
+                and getattr(model.cfg, "frontend", "none") == "none"
+                and not model.cfg.is_encdec
+                and shape.seq_len > CHUNK_TOKENS)
+    out = []
+    for layout in SERVE_LAYOUTS:
+        if not has_cache:
+            out.append((layout, None, False))
+            continue
+        for spec in CACHE_SPEC_CANDIDATES:
+            out.append((layout, spec, False))
+    if chunk_ok:
+        for layout in SERVE_LAYOUTS:
+            for spec in CACHE_SPEC_CANDIDATES:
+                out.append((layout, spec, True))
+    return out
+
+
 def analytic_serve_decision(model, shape, mesh, *,
                             budget_bytes: float = DEVICE_HBM_BYTES,
                             margin: float = DEFAULT_MARGIN) -> LayoutDecision:
-    """Compile-free decision for serve launchers (serve.py / ServeLoop)."""
-    return choose_serve_layout(
-        lambda name: analytic_eval(model, shape, mesh, name),
-        budget_bytes=budget_bytes, margin=margin)
+    """Compile-free decision for serve launchers (serve.py / ServeLoop):
+    scores the full (weight layout x cache spec [x chunked]) product."""
+    evals = [analytic_eval(model, shape, mesh, layout, cache_spec=spec,
+                           chunked=ch)
+             for layout, spec, ch in serve_product_candidates(model, shape)]
+    return decide(evals, budget_bytes=budget_bytes, margin=margin)

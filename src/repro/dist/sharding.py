@@ -30,10 +30,40 @@ code runs unchanged in single-device CPU tests.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
+import warnings
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
+
+
+class ShardingFallbackWarning(UserWarning):
+    """A PRIORITY logical dim (heads / kv_heads) could not claim its mesh
+    axis (divisibility or axis-used-once failed) and the dim fell back to
+    replication.  This is exactly the footgun that silently replicated a
+    432 GB/dev decode cache for qwen1.5-4b (20 kv heads on a 16-wide
+    model axis): the resolution still proceeds -- the warning + the
+    FallbackRecord in the caller's `report` make it visible."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackRecord:
+    """One recorded resolution fallback (see logical_to_mesh_spec)."""
+    logical: str                  # logical dim name, e.g. "kv_heads"
+    dim: int                      # tensor dim size that failed to shard
+    shape: tuple                  # full tensor shape
+    candidates: tuple             # mesh axes the rule offered
+    reason: str                   # "indivisible" | "axis_taken"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# warn once per distinct (logical, dim, mesh axis sizes) -- resolution
+# runs per tensor leaf per trace and would otherwise emit thousands of
+# identical warnings
+_warned_fallbacks: set = set()
 
 
 # ---------------------------------------------------------------------------
@@ -119,11 +149,16 @@ def _mesh_sizes(mesh) -> dict:
 
 
 def logical_to_mesh_spec(logical_axes, shape, mesh,
-                         rules: RuleSet | None = None) -> PartitionSpec:
+                         rules: RuleSet | None = None,
+                         report: list | None = None) -> PartitionSpec:
     """Resolve one tensor's logical axes to a PartitionSpec for `mesh`.
 
     logical_axes: per-dim entries -- a logical name, None, or an explicit
         tuple of mesh axis names.  Must match len(shape).
+    report: optional list; a FallbackRecord is appended for every PRIORITY
+        dim that had a live candidate axis but resolved to None
+        (replication).  A ShardingFallbackWarning is emitted once per
+        distinct (logical, dim, mesh) either way.
     """
     rules = DEFAULT_RULES if rules is None else rules
     if len(logical_axes) != len(shape):
@@ -164,10 +199,40 @@ def logical_to_mesh_spec(logical_axes, shape, mesh,
                 return emit([cand])
         return None
 
+    def note_fallback(name, dim):
+        """A priority dim resolved to None: was a candidate axis live?
+        Axes claimed by an explicit pass-0 tuple don't count -- the
+        caller chose that placement (e.g. the ring cache deliberately
+        gives "model" to the seq dim instead of kv_heads)."""
+        cands, reason = [], None
+        for cand in rules.get(name, ()):
+            for ax in (cand if isinstance(cand, (tuple, list)) else (cand,)):
+                if ax not in sizes or sizes[ax] <= 1 or ax in explicit:
+                    continue
+                cands.append(ax)
+                reason = "axis_taken" if ax in used else "indivisible"
+        if reason is None:
+            return
+        rec = FallbackRecord(name, dim, tuple(shape), tuple(cands), reason)
+        if report is not None:
+            report.append(rec)
+        key = (name, dim, reason, tuple(sorted(sizes.items())))
+        if key not in _warned_fallbacks:
+            _warned_fallbacks.add(key)
+            warnings.warn(
+                f"priority dim '{name}' (size {dim}, tensor {tuple(shape)}) "
+                f"cannot shard over {cands} ({reason}: "
+                f"{ {a: sizes[a] for a in cands} }) and REPLICATES -- "
+                f"consider a seq-sharded ring cache spec "
+                f"(models/cache.py) for decode caches",
+                ShardingFallbackWarning, stacklevel=3)
+
     # Pass 0: explicit mesh-axis tuples bind first (caller knows best).
+    explicit: set[str] = set()
     for i, ax in enumerate(logical_axes):
         if isinstance(ax, (tuple, list)):
             entries[i] = emit(claim_stack(ax, shape[i]))
+            explicit.update(used)
     # Pass 1: priority logical dims; Pass 2: everything else, in position
     # order.
     for wave in (rules.priority, None):
@@ -179,6 +244,8 @@ def logical_to_mesh_spec(logical_axes, shape, mesh,
             if wave is None and ax in rules.priority:
                 continue
             entries[i] = resolve_rule(ax, shape[i])
+            if wave is not None and entries[i] is None:
+                note_fallback(ax, shape[i])
     return PartitionSpec(*entries)
 
 

@@ -14,14 +14,23 @@ and records memory_analysis / cost_analysis / per-collective traffic into
 artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline tables.
 
 Serve cells (prefill/decode) AOT-compile every candidate weight layout
-(stationary / hybrid / fsdp, see dist/sharding.SERVE_LAYOUTS) and let
-repro.dist.policy pick one from the XLA memory_analysis numbers with
-headroom-aware scoring; the decision (chosen layout, per-candidate peak
-HBM, headroom, reason) lands in the artifact under "layout_decision".
+(stationary / hybrid / fsdp, see dist/sharding.SERVE_LAYOUTS) under the
+config's own cache spec and let repro.dist.policy pick one from the XLA
+memory_analysis numbers with headroom-aware scoring.  When NO baseline
+candidate fits, the policy walks the analytic (weight layout x cache
+spec) product frontier (ring-sharded / int8 caches, chunked prefill; see
+models/cache.py) best-first, compiling candidates until one is
+XLA-verified under budget -- so the chosen candidate is always backed by
+a real memory_analysis, never an analytic estimate.  The decision
+(chosen layout + cache spec, per-candidate peak HBM, headroom, reason)
+lands in the artifact under "layout_decision"; cache-carrying entries
+also record cache_bytes_analytic next to an XLA-derived counterpart for
+the calibration pin in tests/test_cache_spec.py.
 
 Usage:
   python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k --mesh multi
   python -m repro.launch.dryrun --all [--mesh both] [--force]
+  python -m repro.launch.dryrun --check-fit --mesh both   # analytic CI gate
 """
 
 import argparse
@@ -197,29 +206,72 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "note": "single island on the single-pod mesh: the exchange "
                         "is an identity; lowered on the multi-pod mesh"}
 
-    else:  # prefill / decode: weight layout picked by repro.dist.policy
+    else:  # prefill / decode: (weight layout x cache spec) product,
+        #       picked by repro.dist.policy from XLA memory_analysis
+        import dataclasses as _dc
+        from repro.dist.sharding import SERVE_LAYOUTS
         p_defs = model.param_defs()
         in_defs = model.input_defs(shape)
-        if shape.kind == "prefill":
-            base = "prefill_step"
-            step = S.make_prefill_step(model)
-            all_defs, donate = (p_defs, in_defs), ()
-        else:
-            base = "decode_step"
-            c_defs = model.cache_defs(shape.global_batch, shape.seq_len)
-            step = S.make_decode_step(model)
-            all_defs, donate = (p_defs, in_defs, c_defs), (2,)
-        args = tuple(abstract_params(d) for d in all_defs)
+        B, Sq = shape.global_batch, shape.seq_len
+        base = "prefill_step" if shape.kind == "prefill" else "decode_step"
+        spec_capable = (model.supports_cache_spec
+                        and model._cache_defs is not None)
 
-        def probe(layout):
-            """AOT-compile the step under one candidate layout; the policy
-            scores the XLA memory_analysis + hlo_cost roofline."""
+        def _sharded(defs, rules):
+            return dist_policy.sharded_bytes(defs, mesh, rules)
+
+        def probe(layout, cache_spec=None, chunked=False):
+            """AOT-compile the step under one (layout, cache spec
+            [, chunked]) candidate; the policy scores the XLA
+            memory_analysis + hlo_cost roofline.  cache_spec=None keeps
+            the config's own spec (the baseline probes)."""
             rules = serve_layout_rules(layout)
-            entry = lower_entry(f"{base}@{layout}", step,
+            m = model if not cache_spec else \
+                build_model(_dc.replace(cfg, cache_spec=cache_spec))
+            if chunked:
+                C = dist_policy.CHUNK_TOKENS
+                step = S.make_chunk_prefill_step(m)
+                ch_in = {
+                    "tokens": pdef((B, C), ("batch", None), dtype=jnp.int32),
+                    "positions": pdef((B, C), ("batch", None),
+                                      dtype=jnp.int32),
+                    "last_index": pdef((B,), ("batch",), dtype=jnp.int32),
+                }
+                c_defs = m.cache_defs(B, Sq)
+                all_defs, donate = (p_defs, ch_in, c_defs), (2,)
+            elif shape.kind == "prefill":
+                step = S.make_prefill_step(m)
+                all_defs, donate = (p_defs, in_defs), ()
+            else:
+                c_defs = m.cache_defs(B, Sq)
+                step = S.make_decode_step(m)
+                all_defs, donate = (p_defs, in_defs, c_defs), (2,)
+            args = tuple(abstract_params(d) for d in all_defs)
+            ev_key = layout + (f"+{cache_spec}" if cache_spec else "") + \
+                ("+chunked" if chunked else "")
+            entry = lower_entry(f"{base}@{ev_key}", step,
                                 tuple(specs(d, rules) for d in all_defs),
                                 args, donate=donate, rules=rules)
+            # analytic cache bytes + an XLA-derived counterpart for the
+            # 2x calibration pin (tests/test_cache_spec.py): decode
+            # carries the cache as a donated ARGUMENT, one-shot prefill
+            # RETURNS it as a non-aliased output.
+            ma = entry["memory_analysis"]
+            if len(all_defs) == 3:
+                entry["cache_bytes_analytic"] = _sharded(all_defs[2], rules)
+                entry["cache_bytes_xla_derived"] = max(
+                    ma.get("argument_size_in_bytes", 0)
+                    - _sharded(p_defs, rules) - _sharded(all_defs[1], rules),
+                    0.0)
+            elif spec_capable:
+                entry["cache_bytes_analytic"] = \
+                    _sharded(m.cache_defs(B, Sq), rules)
+                entry["cache_bytes_xla_derived"] = max(
+                    ma.get("output_size_in_bytes", 0)
+                    - ma.get("alias_size_in_bytes", 0), 0.0)
             return dist_policy.eval_from_compiled(
-                layout, entry["memory_analysis"], entry["roofline"])
+                layout, ma, entry["roofline"],
+                cache=cache_spec or "", chunked=chunked)
 
         if forced_layout:
             probe(forced_layout)
@@ -228,12 +280,39 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             result["layout_decision"] = {"layout": forced_layout,
                                          "reason": "forced by override"}
         else:
-            decision = dist_policy.choose_serve_layout(probe)
+            # baseline probes: the 3 weight layouts under the config's own
+            # cache spec (today's table when everything fits)
+            evals = [probe(layout) for layout in SERVE_LAYOUTS]
+            decision = dist_policy.decide(evals)
+            if not decision.fits and spec_capable:
+                # walk the analytic (layout x cache spec) frontier,
+                # compiling candidates best-first until one is
+                # XLA-verified to fit (bounded tries); skip the head/bf16
+                # one-shot candidates -- that IS the baseline convention
+                # already compiled above.
+                cap = decision.budget_bytes * decision.margin
+                cands = [
+                    (lo, cs, ch) for (lo, cs, ch)
+                    in dist_policy.serve_product_candidates(model, shape)
+                    if cs is not None
+                    and not (cs == "head/bf16" and not ch
+                             and cfg.cache_spec in ("auto", "head/bf16"))]
+                scored = sorted(
+                    ((dist_policy.analytic_eval(
+                        model, shape, mesh, lo, cache_spec=cs, chunked=ch),
+                      lo, cs, ch) for lo, cs, ch in cands),
+                    key=lambda t: (t[0].hbm_bytes > cap, t[0].step_time_s))
+                for _, lo, cs, ch in scored[:6]:
+                    ev = probe(lo, cache_spec=cs, chunked=ch)
+                    evals.append(ev)
+                    if ev.hbm_bytes <= cap:
+                        break
+                decision = dist_policy.decide(evals)
             result["layout_decision"] = decision.as_dict()
             # canonical entry = the chosen probe; losing probes stay only
             # as compact evals inside layout_decision["candidates"]
             result["entries"][base] = \
-                result["entries"].pop(f"{base}@{decision.layout}")
+                result["entries"].pop(f"{base}@{decision.key}")
             for k in [k for k in result["entries"]
                       if k.startswith(base + "@")]:
                 del result["entries"][k]
@@ -256,6 +335,45 @@ def all_cells(meshes=("single", "multi")) -> list[tuple[str, str, str]]:
     return cells
 
 
+def check_fit(meshes=("single", "multi")) -> int:
+    """Analytic-only CI gate: every serve cell must have >=1 fitting
+    (weight layout x cache spec) product.  Runs on AbstractMesh (no
+    512-device env, no compiles) so the CI scale job can assert coverage
+    in seconds; the compiled sweep is the ground truth behind it."""
+    from repro.configs import get_config, list_archs
+    from repro.dist import policy as dist_policy
+    from repro.launch.mesh import abstract_production_mesh
+    from repro.models import build_model
+    from repro.models.config import SHAPES
+    bad = []
+    for mesh_kind in meshes:
+        mesh = abstract_production_mesh(multi_pod=(mesh_kind == "multi"))
+        for arch in list_archs():
+            cfg = get_config(arch)
+            if cfg.family == "cnn":
+                continue
+            model = build_model(cfg)
+            for shape_name, shape in SHAPES.items():
+                if shape.kind == "train":
+                    continue
+                if shape_name == "long_500k" and not cfg.sub_quadratic:
+                    continue
+                d = dist_policy.analytic_serve_decision(model, shape, mesh)
+                print(f"[check-fit] {mesh_kind:6s} {arch:22s} "
+                      f"{shape_name:12s} {d.key:30s} "
+                      f"peak={d.chosen.hbm_bytes/1e9:7.2f} GB "
+                      f"{'ok' if d.fits else 'NO-FIT'}", flush=True)
+                if not d.fits:
+                    bad.append((arch, shape_name, mesh_kind))
+    if bad:
+        print(f"[check-fit] {len(bad)} cells with NO fitting "
+              f"(layout, cache) product: {bad}", flush=True)
+        return 1
+    print("[check-fit] every serve cell has >=1 fitting (weight, cache) "
+          "layout", flush=True)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -263,6 +381,9 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi",
                                                          "both"])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--check-fit", action="store_true",
+                    help="analytic-only: assert every serve cell has >=1 "
+                         "fitting (weight layout x cache spec) product")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--overrides", default=None,
                     help="JSON dict of ModelConfig overrides (perf sweeps)")
@@ -270,6 +391,10 @@ def main():
                     help="artifact filename suffix for override sweeps")
     args = ap.parse_args()
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
+
+    if args.check_fit:
+        meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+        sys.exit(check_fit(meshes))
 
     if args.all:
         meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
@@ -306,7 +431,11 @@ def main():
                      indent=2, default=str))
     if "layout_decision" in res:
         d = res["layout_decision"]
-        print(f"  layout={d['layout']} ({d.get('reason', '')})")
+        cs = d.get("cache_spec", "")
+        print(f"  layout={d['layout']}"
+              + (f" cache={cs}" if cs else "")
+              + (" chunked" if d.get("chunked") else "")
+              + f" ({d.get('reason', '')})")
     for ename, e in res.get("entries", {}).items():
         if "roofline" in e:
             r = e["roofline"]

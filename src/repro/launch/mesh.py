@@ -25,10 +25,24 @@ def make_mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
+def production_mesh_spec(*, multi_pod: bool = False):
+    """(shape, axes) of the production mesh, without touching devices."""
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape, axes = production_mesh_spec(multi_pod=multi_pod)
     return make_mesh(shape, axes)
+
+
+def abstract_production_mesh(*, multi_pod: bool = False):
+    """AbstractMesh with the production shape: usable for ANALYTIC layout
+    checks (only mesh.shape is consulted) without the 512-device env."""
+    from repro.dist.sharding import abstract_mesh
+    shape, axes = production_mesh_spec(multi_pod=multi_pod)
+    return abstract_mesh(shape, axes)
 
 
 def make_host_mesh():

@@ -29,21 +29,41 @@ from repro.models.config import ShapeConfig
 
 
 def pick_layout(model, mesh, *, batch: int, seq_len: int,
-                layout: str = "auto"):
-    """Resolve the serve weight layout: the policy's analytic decision
-    for "auto", else the named layout (the full candidate table is still
-    computed so the caller can log headroom)."""
+                layout: str = "auto", cache: str = "auto"):
+    """Resolve the serve (weight layout, cache spec): the policy's
+    analytic product decision for "auto"/"auto", else the named layout
+    and/or CacheSpec (the full candidate table is still computed so the
+    caller can log headroom)."""
     import dataclasses
     shape = ShapeConfig("serve", "decode", seq_len, batch)
     decision = dist_policy.analytic_serve_decision(model, shape, mesh)
-    if layout != "auto" and layout != decision.layout:
-        forced = next(e for e in decision.evals if e.layout == layout)
+    if cache != "auto" and model.supports_cache_spec:
+        from repro.models.cache import CacheSpec
+        cache = CacheSpec.parse(cache).name
+    if layout == "auto" and cache == "auto":
+        return decision
+    cands = [e for e in decision.evals
+             if (layout == "auto" or e.layout == layout)
+             and (cache == "auto" or e.cache == cache)
+             and not e.chunked]
+    if not cands:
+        # a spec outside the candidate table (e.g. "ring:2/int8"):
+        # evaluate the forced combination directly
+        cands = [dist_policy.analytic_eval(
+            model, shape, mesh,
+            layout if layout != "auto" else decision.layout,
+            cache_spec=None if cache == "auto" else cache)]
+    cap = decision.budget_bytes * decision.margin
+    fits = [e for e in cands if e.hbm_bytes <= cap]
+    best = min(fits or cands, key=lambda e: e.step_time_s)
+    if best.key != decision.key:
         decision = dataclasses.replace(
-            decision, layout=layout,
-            fits=forced.hbm_bytes
-            <= decision.budget_bytes * decision.margin,
-            reason=f"forced --layout {layout} (policy preferred "
-                   f"{decision.layout}: {decision.reason})")
+            decision, layout=best.layout, cache_spec=best.cache,
+            chunked=best.chunked, fits=bool(fits),
+            evals=decision.evals + tuple(
+                e for e in cands if e not in decision.evals),
+            reason=f"forced layout={layout} cache={cache} (policy "
+                   f"preferred {decision.key}: {decision.reason})")
     return decision
 
 
@@ -58,6 +78,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--layout", default="auto",
                     choices=["auto"] + sorted(SERVE_LAYOUTS))
+    ap.add_argument("--cache", default="auto",
+                    help="KV-cache spec 'layout[:shards]/dtype' (e.g. "
+                         "ring:4/int8, head/bf16); 'auto' lets the "
+                         "policy pick (models/cache.py)")
     ap.add_argument("--paged", action="store_true",
                     help="serve through the block-table paged "
                          "continuous-batching loop (PagedServeLoop) "
@@ -74,9 +98,16 @@ def main(argv=None):
     mesh = make_host_mesh()
     decision = pick_layout(model, mesh, batch=args.batch,
                            seq_len=args.prompt_len + args.gen,
-                           layout=args.layout)
-    print(f"[serve] layout={decision.layout} "
-          f"(peak {decision.chosen.hbm_bytes/1e9:.2f} GB/dev, "
+                           layout=args.layout, cache=args.cache)
+    if (model.supports_cache_spec and decision.cache_spec
+            and decision.cache_spec != cfg.cache_spec):
+        import dataclasses as _dc
+        # params are spec-independent: only the cache tree changes shape
+        cfg = _dc.replace(cfg, cache_spec=decision.cache_spec)
+        model = build_model(cfg)
+    print(f"[serve] layout={decision.layout}"
+          + (f" cache={decision.cache_spec}" if decision.cache_spec else "")
+          + f" (peak {decision.chosen.hbm_bytes/1e9:.2f} GB/dev, "
           f"headroom {decision.headroom_bytes()/1e9:.2f} GB) "
           f"-- {decision.reason}")
     if args.paged:

@@ -103,12 +103,26 @@ class ServeLoop(_ServeBase):
     """Contiguous per-slot cache (see module docstring)."""
 
     def __init__(self, model, params, *, max_batch: int = 4,
-                 max_len: int = 512, mesh=None, layout: str = "auto"):
+                 max_len: int = 512, mesh=None, layout: str = "auto",
+                 cache_spec: str | None = None):
         from repro.models.config import ShapeConfig
         super().__init__(model, params, max_batch=max_batch, mesh=mesh,
                          layout=layout,
                          shape=ShapeConfig("serve", "decode", max_len,
                                            max_batch))
+        # cache_spec: "layout[:shards]/dtype" (models/cache.py) forces the
+        # KV-cache layout; None defers to the layout policy's product
+        # decision (when mesh= was given), else the config's own spec.
+        spec = cache_spec
+        if spec is None and self.layout_decision is not None:
+            spec = self.layout_decision.cache_spec or None
+        if spec and model.supports_cache_spec \
+                and spec != model.cfg.cache_spec:
+            from repro.models import build_model
+            model = build_model(
+                dataclasses.replace(model.cfg, cache_spec=spec))
+            self.model = model    # params are spec-independent
+        self.cache_spec = spec
         self.S = max_len
         from repro.models.param import is_def
         self.cache = jax.tree.map(

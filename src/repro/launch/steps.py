@@ -130,6 +130,23 @@ def make_prefill_step(model):
     return prefill_step
 
 
+def make_chunk_prefill_step(model):
+    """One chunk of CONTIGUOUS chunked prefill: (params, batch, cache) ->
+    (next_tok, cache).  `batch` carries the chunk's tokens, their absolute
+    positions, and last_index (the final valid position, for tail chunks
+    padded to the chunk length); `cache` is the spec'd contiguous KV cache
+    from models/cache.py, donated like the decode cache.  Streaming a long
+    prompt through fixed-size chunks bounds prefill temporaries (weight
+    gathers, MoE dispatch) to one chunk while the resident cache keeps its
+    CacheSpec footprint -- the fit story for temp-dominated prefill cells."""
+    def chunk_prefill_step(params, batch, cache):
+        logits, cache = model.apply(params, batch, mode="chunk_prefill",
+                                    cache=cache)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok, cache
+    return chunk_prefill_step
+
+
 def make_decode_step(model):
     def decode_step(params, batch, cache):
         logits, cache = model.apply(params, batch, mode="decode", cache=cache)

@@ -157,7 +157,20 @@ def main(argv=None):
 
     def robust_exchange(cur_params, ok: np.ndarray):
         """Byzantine-robust fold of the finite island models; every island
-        receives the fold (no mixing matrix an attacker could dominate)."""
+        receives the fold (no mixing matrix an attacker could dominate).
+        With --compress the members are first round-tripped through the
+        compressed delta wire (per-island payloads) and the quarantine
+        gate re-runs on the DECOMPRESSED deltas -- the fold must see and
+        threshold what the wire carries, not full-precision local
+        weights."""
+        tag = f"robust-exchange:{args.robust_agg}"
+        if compress != "none":
+            from repro.core import compression as comp
+            cur_params = comp.roundtrip_islands(
+                cur_params, base_params, mode=compress,
+                k_frac=args.topk_frac)
+            ok = ok & np.asarray(faults_mod.finite_members(cur_params))
+            tag += f"+{args.compress}"
         keep = np.flatnonzero(ok)
         if keep.size == 0:
             return None, "no-exchange"
@@ -174,7 +187,7 @@ def main(argv=None):
         mixed = jax.tree.map(
             lambda a, l: jnp.broadcast_to(a.astype(l.dtype)[None], l.shape),
             agg_t, cur_params)
-        return mixed, f"robust-exchange:{args.robust_agg}"
+        return mixed, tag
 
     def exchange_input(cur_params, rnd: int):
         """What the aggregator SEES: Byzantine islands corrupt their update

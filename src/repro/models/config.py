@@ -46,6 +46,12 @@ class ModelConfig:
     frontend: str = "none"           # none | vision_stub | audio_stub
     frontend_len: int = 0            # patches / frames occupying seq prefix
 
+    # --- KV-cache spec (models/cache.py owns the convention) ---
+    # "auto" (== "head/bf16", the historical convention) or
+    # "layout[:shards]/dtype", e.g. "ring/bf16", "ring:4/int8", "head/int8".
+    # The serve policy overrides this per cell via dataclasses.replace.
+    cache_spec: str = "auto"
+
     # --- misc ---
     norm: str = "rmsnorm"            # rmsnorm | layernorm
     act: str = "silu"                # silu (gated) | gelu (gated) | gelu_plain

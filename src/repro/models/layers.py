@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.dist.sharding import constrain, mesh_axis_size
+from repro.models import cache as kvcache
 from repro.models.param import pdef
 
 # --------------------------------------------------------------------------
@@ -92,9 +93,9 @@ def rope_apply(x, positions, theta=10_000.0, fraction=1.0):
 # Attention
 # --------------------------------------------------------------------------
 
-# decode headroom appended to non-windowed prefill caches (slots for
-# subsequently generated tokens)
-PREFILL_DECODE_MARGIN = 128
+# decode headroom appended to non-windowed prefill caches; the value (and
+# every other cache convention) lives in models/cache.py
+PREFILL_DECODE_MARGIN = kvcache.PREFILL_DECODE_MARGIN
 
 
 def attention_full(q, k, v, *, causal=True, window=0, q_offset=0):
@@ -293,6 +294,47 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
     return out.reshape(B, 1, H, D)
 
 
+def ring_decode_attention(q, k_cache, v_cache, cache_len, *, segments):
+    """Seq-sharded (ring) decode: identical math to decode_attention,
+    restructured so the seq dim splits into `segments` independent
+    slices merged by log-sum-exp.
+
+    Under SPMD with the cache's seq dim sharded over "model" (the
+    CacheSpec "ring" layout), each shard computes partial attention over
+    its OWN S/n cache slice; the cross-shard traffic is the per-segment
+    (B, n, Hkv, G) max/sum statistics plus the (B, Hkv, G, D) partial
+    outputs -- instead of GSPMD all-gathering the whole cache to every
+    model shard (the measured 68 GB/step failure mode this layout
+    replaces).  Numerics: scores and softmax statistics in fp32 with ONE
+    global max (exp(s - M) == what jax.nn.softmax computes), so the
+    probabilities match decode_attention's bit-for-bit up to fp32
+    summation order; greedy decode is token-identical on the parity
+    suite (tests/test_cache_spec.py).
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    n = segments
+    Sn = S // n
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    seg_ax = ("batch", ("model",), None, "kv_heads", None)
+    ks = constrain(k_cache.reshape(B, n, Sn, Hkv, D), seg_ax)
+    vs = constrain(v_cache.reshape(B, n, Sn, Hkv, D), seg_ax)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhgd,bnshd->bnhgs", qg, ks,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(n)[:, None] * Sn + jnp.arange(Sn)[None, :]   # (n,Sn)
+    valid = kpos[None] < cache_len[:, None, None]                  # (B,n,Sn)
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
+    m_seg = s.max(axis=-1)                     # (B,n,Hkv,G) segment-local
+    M = m_seg.max(axis=1, keepdims=True)       # cross-segment (tiny)
+    p = jnp.exp(s - M[..., None])
+    l = p.sum(axis=-1).sum(axis=1)             # (B,Hkv,G) cross-segment
+    probs = (p / l[:, None, :, :, None]).astype(q.dtype)
+    out = jnp.einsum("bnhgs,bnshd->bhgd", probs, vs)
+    return out.reshape(B, 1, H, D)
+
+
 def paged_kv_write(kp, vp, bt, kk, vv, positions):
     """Scatter per-token K/V into the paged pool.
 
@@ -361,21 +403,8 @@ def paged_chunk_attention(q, k_seq, v_seq, positions):
     return out.reshape(B, C, H, D)
 
 
-def paged_attention_cache_defs(cfg, batch, num_blocks, block_size,
-                               max_blocks_per_seq):
-    """Abstract paged-cache leaves (per layer): one block POOL shared by
-    all sequences plus per-slot block tables and lengths.  Unlike the
-    contiguous cache, HBM scales with the pool (total tokens resident),
-    not max_batch * max_len."""
-    kv = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
-    ax = (None, None, "kv_heads", None)
-    return {
-        "kp": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
-        "vp": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
-        "bt": pdef((batch, max_blocks_per_seq), ("batch", None),
-                   dtype=jnp.int32, init="zeros"),
-        "len": pdef((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
-    }
+# the paged-cache convention lives in models/cache.py with the rest
+paged_attention_cache_defs = kvcache.paged_attention_cache_defs
 
 
 def select_attention(q, k, v, *, causal=True, window=0, q_offset=0):
@@ -464,7 +493,7 @@ def attention_apply(p, cfg, x, positions, *, mode="train", cache=None,
         kk = rope_apply(kk, positions, cfg.rope_theta, cfg.rope_fraction)
 
     new_cache = cache
-    if mode == "chunk_prefill":
+    if mode == "chunk_prefill" and cache is not None and "kp" in cache:
         # paged chunked prefill: scatter this chunk's K/V into the block
         # pool, then exact attention over the sequence's gathered view
         # (which already holds any shared-prefix blocks -- their
@@ -475,6 +504,23 @@ def attention_apply(p, cfg, x, positions, *, mode="train", cache=None,
         k_seq, v_seq = paged_gather_kv(kp, vp, cache["bt"])
         out = paged_chunk_attention(q, k_seq, v_seq, positions)
         new_cache = {"kp": kp, "vp": vp}
+    elif mode == "chunk_prefill":
+        # CONTIGUOUS chunked prefill (rectangular batch: all rows at the
+        # same offset): write this chunk's K/V into the spec'd cache at
+        # the current length, then blockwise attention of the chunk over
+        # the cache prefix.  Streams a long prompt through in bounded
+        # chunks so the per-step temporaries scale with the chunk, while
+        # the resident cache keeps the spec's (ring / int8) footprint --
+        # the prefill path the layout policy probes for cells whose
+        # one-shot prefill blows the HBM budget.
+        spec = kvcache.spec_of(cfg)
+        cache_len = cache["len"]
+        new_cache = kvcache.write_kv(cache, kk, vv,
+                                     cache_len.astype(jnp.int32), spec=spec)
+        new_cache["len"] = cache_len + T
+        k_read, v_read = kvcache.read_kv(new_cache)
+        out = select_attention(q, k_read, v_read, causal=True,
+                               window=window, q_offset=cache_len[0])
     elif mode == "decode" and "kp" in cache:
         assert not window, "paged cache does not support sliding windows"
         kp, vp, bt = cache["kp"], cache["vp"], cache["bt"]
@@ -484,59 +530,43 @@ def attention_apply(p, cfg, x, positions, *, mode="train", cache=None,
         out = decode_attention(q, k_seq, v_seq, cache_len + 1)
         new_cache = {"kp": kp, "vp": vp, "bt": bt, "len": cache_len + 1}
     elif mode == "decode":
-        k_cache, v_cache, cache_len = cache["k"], cache["v"], cache["len"]
-        S = k_cache.shape[1]
+        spec = kvcache.spec_of(cfg)
+        cache_len = cache["len"]
+        S = cache["k"].shape[1]
         if window and S == window:
             slots = (cache_len % window).astype(jnp.int32)  # ring buffer
         else:
             slots = cache_len.astype(jnp.int32)
-        # PER-BATCH slot writes (vmapped DUS): sequences at different
-        # positions coexist in one batch (continuous batching, serve_loop)
-        upd = jax.vmap(
-            lambda c, u, s: lax.dynamic_update_slice_in_dim(c, u, s, 0))
-        k_cache = upd(k_cache, kk.astype(k_cache.dtype), slots)
-        v_cache = upd(v_cache, vv.astype(v_cache.dtype), slots)
-        out = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window)
-        new_cache = {"k": k_cache, "v": v_cache, "len": cache_len + 1}
+        # PER-BATCH slot writes (vmapped DUS inside cache.write_kv):
+        # sequences at different positions coexist in one batch
+        # (continuous batching, serve_loop); int8 caches quantise the new
+        # row and update the rowwise scales alongside.
+        new_cache = kvcache.write_kv(cache, kk, vv, slots, spec=spec)
+        new_cache["len"] = cache_len + 1
+        k_read, v_read = kvcache.read_kv(new_cache)
+        # SWA ring buffers (S == window) keep their wraparound masking in
+        # decode_attention's window arg; segment the seq dim otherwise.
+        n = kvcache.ring_segments(spec, S) if not window else 1
+        if n > 1:
+            out = ring_decode_attention(q, k_read, v_read, cache_len + 1,
+                                        segments=n)
+        else:
+            out = decode_attention(q, k_read, v_read, cache_len + 1,
+                                   window=window)
     else:
         out = select_attention(q, kk, vv, causal=causal and kv_source is None,
                                window=window)
         if mode == "prefill" and kv_source is None:
-            if window and kk.shape[1] >= window:
-                # ring buffer: keep exactly `window` positions; decode
-                # overwrites slot len % window (requires T % window == 0,
-                # true for all assigned shapes).
-                kc, vc = kk[:, -window:], vv[:, -window:]
-            else:
-                # full cache: pad headroom so decode steps have slots to
-                # write into (dynamic_update_slice clamps at the boundary).
-                pad = PREFILL_DECODE_MARGIN
-                kc = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                vc = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            new_cache = {
-                "k": kc, "v": vc,
-                "len": jnp.full((B,), T, jnp.int32),
-            }
+            new_cache = kvcache.pack_prefill_cache(
+                cfg, kk, vv, window=window)
     out = constrain(out, q_axes if seq_cp else ("batch", None, "heads", None))
     y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     return constrain(y, ("batch", None, None)), new_cache
 
 
-def attention_cache_defs(cfg, batch, seq_len):
-    """Abstract KV-cache leaves for decode dry-runs (per layer).
-
-    Sharding: kv heads over "model" when divisible (canonical TP decode),
-    else the SEQUENCE dim shards over "model" (context parallelism): the
-    baseline Dh-sharded layout made XLA all-gather the whole cache in f32
-    every layer (68 GB/step for minitron decode_32k; SSPerf iteration)."""
-    keep = min(cfg.window, seq_len) if cfg.window else seq_len
-    kv = (batch, keep, cfg.num_kv_heads, cfg.head_dim)
-    ax = ("batch", "kv_seq", "kv_heads", None)
-    return {
-        "k": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
-        "v": pdef(kv, ax, dtype=jnp.bfloat16, init="zeros"),
-        "len": pdef((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
-    }
+# the contiguous-cache convention (shapes / dtypes / logical axes per
+# CacheSpec) lives in models/cache.py
+attention_cache_defs = kvcache.attention_cache_defs
 
 
 # --------------------------------------------------------------------------

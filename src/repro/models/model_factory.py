@@ -44,10 +44,23 @@ class Model:
         return self._apply(params, self.cfg, batch, mode=mode, cache=cache)
 
     # ---- caches ----
-    def cache_defs(self, batch: int, seq_len: int):
+    @property
+    def supports_cache_spec(self) -> bool:
+        """CacheSpec layouts (ring / int8) apply to growing KV caches;
+        SSM / RG-LRU state and the enc-dec cross cache keep their own
+        conventions."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def cache_defs(self, batch: int, seq_len: int, spec=None):
+        """Decode-cache defs; `spec` (a models/cache.CacheSpec or its
+        string form) overrides the config's cache_spec for transformer
+        families, letting the layout policy probe candidate specs
+        without rebuilding the model."""
         if self._cache_defs is None:
             raise ValueError(f"{self.cfg.name}: no decode cache (family="
                              f"{self.cfg.family})")
+        if spec is not None and self.supports_cache_spec:
+            return self._cache_defs(self.cfg, batch, seq_len, spec=spec)
         return self._cache_defs(self.cfg, batch, seq_len)
 
     @property

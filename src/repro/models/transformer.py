@@ -37,8 +37,10 @@ def lm_defs(cfg):
     }
 
 
-def cache_defs(cfg, batch: int, seq_len: int):
-    per_layer = L.attention_cache_defs(cfg, batch, seq_len)
+def cache_defs(cfg, batch: int, seq_len: int, spec=None):
+    """Decode-cache defs under a CacheSpec (default: cfg.cache_spec).
+    The convention itself lives in models/cache.py."""
+    per_layer = L.attention_cache_defs(cfg, batch, seq_len, spec)
     return stack_defs(per_layer, cfg.num_layers)
 
 
@@ -95,10 +97,13 @@ def lm_apply(params, cfg, batch_inputs, *, mode="train", cache=None):
             lp, lc = xs
         else:
             lp, lc = xs, None
-        if mode == "chunk_prefill":
+        if mode == "chunk_prefill" and bt is not None:
             lc = {**lc, "bt": bt}
         x, new_cache, a = _block_apply(lp, cfg, x, positions, mode, lc)
-        if mode == "chunk_prefill":
+        if mode == "chunk_prefill" and bt is not None:
+            # paged: bt rides in batch_inputs, only the pool is carried;
+            # the CONTIGUOUS chunked path (no block tables) carries the
+            # whole spec'd cache {k, v, (scales,) len} like decode does
             new_cache = {k: new_cache[k] for k in ("kp", "vp")}
         return (x, aux + a), new_cache
 

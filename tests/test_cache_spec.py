@@ -1,0 +1,403 @@
+"""CacheSpec layout layer (models/cache.py): parse/validation, sharding
+fallback reporting, and NUMERIC parity of the spec'd decode caches against
+the replicated-bf16 baseline.
+
+The tentpole contract under test: a CacheSpec changes where cache bytes
+live (layout) and how wide they are (dtype) but never which token greedy
+decode emits --
+
+  * ring/bf16 is TOKEN-IDENTICAL to the baseline (one global softmax max
+    across segments, fp32 scores; layers.ring_decode_attention);
+  * */int8 stays within quantisation tolerance at the LOGITS level;
+  * contiguous chunked prefill (mode="chunk_prefill" without a block
+    table) reproduces teacher-forced logits, spec'd cache included;
+  * params are spec-independent: every parity test inits ONE param tree
+    from the baseline model and feeds it to the spec'd model unchanged.
+
+Plus the dryrun-facing pieces: the analytic/XLA cache-bytes calibration
+pin (2x) on a rescued decode_32k cell and the `--check-fit` CI gate.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.dist import sharding
+from repro.models import build_model
+from repro.models import cache as kvcache
+
+CacheSpec = kvcache.CacheSpec
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + abstract defs
+# ---------------------------------------------------------------------------
+
+def test_parse_name_roundtrip():
+    s = CacheSpec.parse("ring:4/int8")
+    assert (s.layout, s.shards, s.dtype) == ("ring", 4, "int8")
+    assert s.quantized and s.name == "ring:4/int8"
+    assert CacheSpec.parse(s.name) == s              # name is re-parseable
+    assert CacheSpec.parse(s) is s                   # instance passthrough
+    assert CacheSpec.parse("head/bf16").name == "head/bf16"
+    assert not CacheSpec.parse("ring/bf16").quantized
+
+
+def test_parse_auto_is_the_historical_convention():
+    # "auto"/None == head/bf16 == what every model did before CacheSpec
+    default = CacheSpec()
+    assert CacheSpec.parse("auto") == default
+    assert CacheSpec.parse(None) == default
+    assert (default.layout, default.dtype, default.shards) == \
+        ("head", "bf16", 0)
+
+
+def test_parse_validation_errors():
+    with pytest.raises(ValueError):
+        CacheSpec.parse("diagonal/bf16")             # unknown layout
+    with pytest.raises(ValueError):
+        CacheSpec.parse("head/fp4")                  # unknown dtype
+    with pytest.raises(ValueError):
+        CacheSpec.parse("head:2/bf16")               # shards need ring
+
+
+def test_kv_axes_by_layout():
+    assert kvcache.kv_axes(CacheSpec.parse("head/bf16")) == \
+        ("batch", "kv_seq", "kv_heads", None)
+    assert kvcache.kv_axes(CacheSpec.parse("replicated/bf16")) == \
+        ("batch", "kv_seq", None, None)
+    # ring: EXPLICIT ("model",) tuple on the seq dim -- binds in
+    # resolution pass 0, before the kv_heads priority wave
+    assert kvcache.kv_axes(CacheSpec.parse("ring/bf16")) == \
+        ("batch", ("model",), "kv_heads", None)
+
+
+def test_ring_segments_halving():
+    ring4 = CacheSpec.parse("ring:4/bf16")
+    assert kvcache.ring_segments(ring4, 144) == 4
+    assert kvcache.ring_segments(ring4, 10) == 2     # 10 % 4 -> halve
+    assert kvcache.ring_segments(ring4, 7) == 1      # odd seq -> no split
+    assert kvcache.ring_segments(CacheSpec.parse("head/bf16"), 144) == 1
+    # shards unset: ambient "model" axis is 1 on the CPU test mesh
+    assert kvcache.ring_segments(CacheSpec.parse("ring/bf16"), 144) == 1
+
+
+def test_int8_defs_add_rowwise_scales():
+    cfg = get_smoke_config("granite-20b")
+    B, S = 2, 32
+    d8 = kvcache.attention_cache_defs(cfg, B, S, spec="head/int8")
+    assert d8["k"].dtype == jnp.int8
+    assert d8["k_scale"].shape == (B, S, cfg.num_kv_heads, 1)
+    assert d8["k_scale"].dtype == jnp.float32
+    assert d8["k_scale"].logical_axes == d8["k"].logical_axes
+    d16 = kvcache.attention_cache_defs(cfg, B, S, spec="head/bf16")
+    assert d16["k"].dtype == jnp.bfloat16
+    assert "k_scale" not in d16 and "v_scale" not in d16
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: sharding fallback is reported, not silent
+# ---------------------------------------------------------------------------
+
+def test_priority_fallback_recorded_and_warned():
+    sharding._warned_fallbacks.clear()
+    mesh = sharding.abstract_mesh((4, 8), ("data", "model"))
+    report = []
+    # qwen1.5-4b's footgun in miniature: 20 kv heads on an 8-wide model
+    # axis -> the cache REPLICATES over "model"
+    with pytest.warns(sharding.ShardingFallbackWarning):
+        spec = sharding.logical_to_mesh_spec(
+            ("batch", "kv_seq", "kv_heads", None), (2, 64, 20, 64), mesh,
+            report=report)
+    assert spec[2] is None                           # replicated, as warned
+    (rec,) = report
+    assert rec.logical == "kv_heads" and rec.dim == 20
+    assert rec.reason == "indivisible" and "model" in rec.candidates
+    assert rec.as_dict()["shape"] == (2, 64, 20, 64)
+
+
+def test_ring_explicit_tuple_suppresses_fallback():
+    """The ring layout DELIBERATELY gives "model" to the seq dim; the
+    kv_heads dim then replicating is the contract, not a footgun -- no
+    record, no warning."""
+    sharding._warned_fallbacks.clear()
+    mesh = sharding.abstract_mesh((4, 8), ("data", "model"))
+    report = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", sharding.ShardingFallbackWarning)
+        spec = sharding.logical_to_mesh_spec(
+            kvcache.kv_axes(CacheSpec.parse("ring/bf16")),
+            (2, 64, 20, 64), mesh, report=report)
+    assert spec[1] == "model" and spec[2] is None
+    assert report == []
+
+
+def test_fallback_warned_once_per_mesh():
+    sharding._warned_fallbacks.clear()
+    mesh = sharding.abstract_mesh((4, 8), ("data", "model"))
+    with pytest.warns(sharding.ShardingFallbackWarning):
+        sharding.logical_to_mesh_spec(
+            ("batch", "kv_seq", "kv_heads", None), (2, 64, 20, 64), mesh)
+    with warnings.catch_warnings():                  # second resolution: quiet
+        warnings.simplefilter("error", sharding.ShardingFallbackWarning)
+        sharding.logical_to_mesh_spec(
+            ("batch", "kv_seq", "kv_heads", None), (2, 64, 20, 64), mesh)
+
+
+# ---------------------------------------------------------------------------
+# Numeric parity: ring / int8 / chunked vs the baseline convention
+# ---------------------------------------------------------------------------
+
+def _batch(model, T, B=2, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = model.cfg
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)),
+                               jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)), jnp.bfloat16)
+    return b
+
+
+def _spec_model(arch, spec):
+    """(baseline model, spec'd model, ONE shared param tree)."""
+    cfg = get_smoke_config(arch)
+    base = build_model(cfg)
+    other = build_model(dataclasses.replace(cfg, cache_spec=spec))
+    params = base.init(jax.random.key(3))
+    return base, other, params
+
+
+def _greedy(model, params, batch, T, steps):
+    """Prefill T tokens then decode `steps` greedy tokens; returns
+    (tokens (B, steps), logits (B, steps, V) fp32)."""
+    B = batch["tokens"].shape[0]
+    pre = {k: (v[:, :T] if k == "tokens" else v) for k, v in batch.items()}
+    logits, cache = model.apply(params, pre, mode="prefill")
+    nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+    toks, logs = [], []
+    for i in range(steps):
+        toks.append(np.asarray(nxt))
+        logits, cache = model.apply(
+            params, {"tokens": nxt[:, None].astype(jnp.int32),
+                     "positions": jnp.full((B, 1), T + i, jnp.int32)},
+            mode="decode", cache=cache)
+        logs.append(np.asarray(logits[:, 0], np.float32))
+        nxt = jnp.argmax(logits[:, 0].astype(jnp.float32), axis=-1)
+    return np.stack(toks, 1), np.stack(logs, 1)
+
+
+# one cache-spec-capable representative per family
+SPEC_FAMILIES = ["granite-20b", "qwen3-moe-235b-a22b", "phi-3-vision-4.2b"]
+
+
+@pytest.mark.parametrize("arch", SPEC_FAMILIES)
+def test_ring_bf16_greedy_token_identical(arch):
+    """ring/bf16 re-lays the SAME bf16 numbers out across seq shards; one
+    global softmax max + fp32 scores make greedy decode token-identical
+    (shards forced to 4 -- the ambient CPU "model" axis is 1, which would
+    degenerate to the unsegmented path)."""
+    base, ring, params = _spec_model(arch, "ring:4/bf16")
+    T, steps = 16, 6
+    batch = _batch(base, T)
+    ref_toks, ref_logs = _greedy(base, params, batch, T, steps)
+    got_toks, got_logs = _greedy(ring, params, batch, T, steps)
+    np.testing.assert_array_equal(got_toks, ref_toks)
+    np.testing.assert_allclose(got_logs, ref_logs, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "chatglm3-6b"])
+@pytest.mark.parametrize("spec", ["head/int8", "ring:4/int8"])
+def test_int8_cache_logits_close(arch, spec):
+    """Rowwise-int8 cache: TEACHER-FORCED decode logits stay within the
+    pinned 1e-2 quantisation tolerance of the bf16 baseline -- rms error
+    and scale-relative max error (max|d| / max|ref|), since rowwise int8's
+    per-element floor is amax/254 ~ 0.4% of the row amax and an absolute
+    max-norm of 1e-2 would be pinning noise.  Greedy argmax must agree
+    exactly on every forced step.  (Teacher forcing, not greedy feedback,
+    so one near-tie flip can't cascade.)"""
+    base, q8, params = _spec_model(arch, spec)
+    T, extra, B = 16, 4, 2
+    batch = _batch(base, T + extra, B)
+    pre = {k: (v[:, :T] if k == "tokens" else v) for k, v in batch.items()}
+
+    def forced_logits(model):
+        _, cache = model.apply(params, pre, mode="prefill")
+        out = []
+        for i in range(extra):
+            logits, cache = model.apply(
+                params,
+                {"tokens": batch["tokens"][:, T + i: T + i + 1],
+                 "positions": jnp.full((B, 1), T + i, jnp.int32)},
+                mode="decode", cache=cache)
+            out.append(np.asarray(logits[:, 0], np.float32))
+        return np.stack(out, 1)
+
+    ref, got = forced_logits(base), forced_logits(q8)
+    d = np.abs(got - ref)
+    assert np.sqrt((d ** 2).mean()) <= 1e-2, f"rms {np.sqrt((d**2).mean())}"
+    rel_max = d.max() / np.abs(ref).max()
+    assert rel_max <= 1e-2, f"scale-relative max error {rel_max:.4f}"
+    np.testing.assert_array_equal(got.argmax(-1), ref.argmax(-1))
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "chatglm3-6b"])
+@pytest.mark.parametrize("spec", [None, "ring:4/bf16"])
+def test_contiguous_chunk_prefill_matches_teacher_forcing(arch, spec):
+    """Contiguous chunked prefill (no block table): streaming the prompt
+    through fixed-size chunks into a zeros cache from cache_defs, then
+    decoding, matches teacher forcing -- under the baseline spec and a
+    ring spec (the fit story dryrun compiles for temp-dominated prefill
+    cells)."""
+    cfg = get_smoke_config(arch)
+    if spec:
+        cfg = dataclasses.replace(cfg, cache_spec=spec)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(5))
+    from repro.models.param import is_def
+    B, T, extra, chunk = 2, 16, 3, 8
+    batch = _batch(model, T + extra, B, seed=5)
+    ref_logits, _ = model.apply(params, batch, mode="train")
+
+    cache = jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype),
+                         model.cache_defs(B, T + extra + 1), is_leaf=is_def)
+    logits = None
+    for pos in range(0, T, chunk):
+        logits, cache = model.apply(
+            params,
+            {"tokens": batch["tokens"][:, pos: pos + chunk],
+             "positions": jnp.broadcast_to(
+                 jnp.arange(pos, pos + chunk, dtype=jnp.int32), (B, chunk)),
+             "last_index": jnp.full((B,), chunk - 1, jnp.int32)},
+            mode="chunk_prefill", cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(ref_logits[:, T - 1], np.float32), rtol=2e-2, atol=2e-2)
+
+    for i in range(extra):                      # decode continues the cache
+        logits, cache = model.apply(
+            params,
+            {"tokens": batch["tokens"][:, T + i: T + i + 1],
+             "positions": jnp.full((B, 1), T + i, jnp.int32)},
+            mode="decode", cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(ref_logits[:, T + i], np.float32),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_params_are_spec_independent():
+    """build_model under any CacheSpec yields the SAME param tree: the
+    spec owns the cache, never the weights (serve.py swaps specs by
+    rebuilding the model around already-initialised params)."""
+    cfg = get_smoke_config("granite-20b")
+    base = build_model(cfg).param_defs()
+    for spec in ("ring:4/bf16", "head/int8", "replicated/bf16"):
+        other = build_model(
+            dataclasses.replace(cfg, cache_spec=spec)).param_defs()
+        assert jax.tree.structure(base) == jax.tree.structure(other)
+        assert jax.tree.map(lambda a, b: a.shape == b.shape, base, other)
+
+
+# ---------------------------------------------------------------------------
+# Policy products (the analytic side the parity backs)
+# ---------------------------------------------------------------------------
+
+def test_serve_product_candidates_shape():
+    from repro.dist import policy as dist_policy
+    from repro.models.config import ShapeConfig
+    model = build_model(get_smoke_config("granite-20b"))
+    dec = dist_policy.serve_product_candidates(
+        model, ShapeConfig("serve", "decode", 32768, 8))
+    specs = {cs for _, cs, _ in dec}
+    assert specs == set(dist_policy.CACHE_SPEC_CANDIDATES)
+    assert not any(ch for _, _, ch in dec)           # chunking is prefill-only
+    pre = dist_policy.serve_product_candidates(
+        model, ShapeConfig("serve", "prefill", 32768, 8))
+    assert any(ch for _, _, ch in pre)               # long prefill: chunked
+    # no-cache families never get spec or chunk candidates
+    ssm = build_model(get_smoke_config("falcon-mamba-7b"))
+    assert all(cs is None and not ch for _, cs, ch in
+               dist_policy.serve_product_candidates(
+                   ssm, ShapeConfig("serve", "decode", 32768, 8)))
+
+
+def test_analytic_prefill_baseline_excludes_cache_bytes():
+    """The no-spec prefill eval keeps the HISTORICAL convention (cache not
+    counted against peak); a spec'd eval counts it -- so adding the
+    product layer shifted no baseline number."""
+    from repro.dist import policy as dist_policy
+    from repro.models.config import ShapeConfig
+    mesh = sharding.abstract_mesh((4, 8), ("data", "model"))
+    model = build_model(get_smoke_config("granite-20b"))
+    shape = ShapeConfig("serve", "prefill", 32768, 8)
+    plain = dist_policy.analytic_eval(model, shape, mesh, "fsdp")
+    spec = dist_policy.analytic_eval(model, shape, mesh, "fsdp",
+                                     cache_spec="head/bf16")
+    assert plain.detail["cache_bytes"] == 0.0
+    assert spec.detail["cache_bytes"] > 0.0
+    assert spec.hbm_bytes > plain.hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# Dryrun: calibration pin + the --check-fit CI gate (subprocess)
+# ---------------------------------------------------------------------------
+
+def _dryrun_env():
+    return dict(os.environ, REPRO_DRYRUN_DIR="dryrun_test",
+                PYTHONPATH="src" + os.pathsep
+                + os.environ.get("PYTHONPATH", ""))
+
+
+def test_dryrun_cache_spec_rescues_decode_32k_and_calibrates():
+    """qwen1.5-4b decode_32k single was THE motivating no-fit cell (20 kv
+    heads -> replicated 432 GB/dev cache).  The product frontier must
+    rescue it with a spec'd cache, and the analytic cache bytes must stay
+    within 2x of the XLA-derived argument bytes (satellite calibration
+    pin)."""
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen1.5-4b", "--shape", "decode_32k", "--mesh", "single",
+         "--force"],
+        cwd=root, env=_dryrun_env(), capture_output=True, text=True,
+        timeout=600)
+    art = root / "artifacts" / "dryrun_test" / \
+        "qwen1.5-4b__decode_32k__single.json"
+    try:
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = json.loads(art.read_text())
+        d = rec["layout_decision"]
+        assert d["fits"], d
+        assert d["cache_spec"], "rescue must come from a spec'd cache"
+        e = rec["entries"]["decode_step"]
+        ours, xla = e["cache_bytes_analytic"], e["cache_bytes_xla_derived"]
+        assert xla > 0
+        assert 0.5 * xla <= ours <= 2.0 * xla, \
+            f"cache bytes {ours:.3g} vs XLA-derived {xla:.3g}"
+    finally:
+        if art.exists():
+            art.unlink()
+
+
+def test_check_fit_gate_passes_both_meshes():
+    """`dryrun --check-fit --mesh both` is the CI scale gate: every serve
+    cell (both meshes) has >=1 fitting (weight layout x cache spec)
+    product, analytically, in seconds."""
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--check-fit",
+         "--mesh", "both"],
+        cwd=root, env=_dryrun_env(), capture_output=True, text=True,
+        timeout=600)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "every serve cell has >=1 fitting" in r.stdout

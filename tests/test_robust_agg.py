@@ -120,3 +120,93 @@ def test_krum_excludes_far_outliers():
 def test_unknown_method_raises():
     with pytest.raises(ValueError):
         agg.robust_aggregate(make_members(3, 0), "no_such_method")
+
+
+# ---- robust fold x compressed exchange -----------------------------------
+# launch/train.py --robust-agg X --compress Y: the fold must see (and the
+# quarantine gate must threshold) the DECOMPRESSED per-island deltas the
+# wire actually carries, not full-precision local weights.
+
+from repro.core import compression as comp
+from repro.core.faults import finite_members
+
+
+def _stacked(P, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(P, 6, 4)) * scale, jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(P, 8)) * scale, jnp.float32)}
+
+
+@pytest.mark.parametrize("mode", ["q8", "topk", "q8_topk"])
+def test_roundtrip_islands_keeps_honest_members_finite(mode):
+    P = 3
+    stacked, base = _stacked(P, 0), _stacked(P, 1, scale=0.0)
+    out = comp.roundtrip_islands(stacked, base, mode=mode, k_frac=0.2)
+    assert finite_members(out).all()
+    assert jax.tree.structure(out) == jax.tree.structure(stacked)
+    assert all(a.shape == b.shape for a, b in
+               zip(jax.tree.leaves(out), jax.tree.leaves(stacked)))
+
+
+def test_roundtrip_islands_q8_reconstruction_bounded():
+    """Per-island q8 wire: reconstruction error <= one quant step
+    (amax / 127) of that island's OWN delta -- islands never share block
+    scales."""
+    P = 4
+    stacked, base = _stacked(P, 2), _stacked(P, 3)
+    out = comp.roundtrip_islands(stacked, base, mode="q8")
+    for i in range(P):
+        for k in ("w", "b"):
+            delta = np.asarray(stacked[k][i] - base[k][i])
+            err = np.abs(np.asarray(out[k][i]) - np.asarray(stacked[k][i]))
+            assert err.max() <= np.abs(delta).max() / 127.0 + 1e-6
+
+
+def test_roundtrip_islands_payloads_are_independent():
+    """Corrupting island 1 must not move island 0's reconstruction by one
+    bit: payloads (top-k selection, block scales) never straddle
+    islands."""
+    P = 2
+    stacked, base = _stacked(P, 4), _stacked(P, 5, scale=0.0)
+    ref = comp.roundtrip_islands(stacked, base, mode="q8_topk", k_frac=0.3)
+    hot = jax.tree.map(lambda l: l.at[1].mul(1e6), stacked)
+    got = comp.roundtrip_islands(hot, base, mode="q8_topk", k_frac=0.3)
+    np.testing.assert_array_equal(np.asarray(ref["w"][0]),
+                                  np.asarray(got["w"][0]))
+    np.testing.assert_array_equal(np.asarray(ref["b"][0]),
+                                  np.asarray(got["b"][0]))
+
+
+@pytest.mark.parametrize("mode", ["topk", "q8_topk"])
+def test_quarantine_gate_thresholds_decompressed_deltas(mode):
+    """An inf smuggled into one island's delta has the largest magnitude,
+    so top-k KEEPS it: the post-roundtrip finite_members gate (what
+    train.py re-ands into `ok`) flags exactly that island while honest
+    islands -- including one with a huge-but-finite delta -- pass."""
+    P = 3
+    stacked, base = _stacked(P, 6), _stacked(P, 7, scale=0.0)
+    stacked = jax.tree.map(lambda l: l, stacked)
+    stacked["w"] = stacked["w"].at[1, 0, 0].set(jnp.inf)   # corrupt island 1
+    stacked["b"] = stacked["b"].at[2].mul(1e4)             # big-but-honest
+    out = comp.roundtrip_islands(stacked, base, mode=mode, k_frac=0.2)
+    ok = finite_members(out)
+    assert not ok[1]
+    assert ok[0] and ok[2]
+
+
+def test_robust_agg_with_compression_converges(capsys):
+    """End-to-end smoke: --compress q8-topk --robust-agg trimmed_mean
+    trains through real exchanges and the loss goes down (the tier-1
+    convergence gate for the robust x compressed composition)."""
+    from repro.launch import train
+    train.main(["--arch", "granite-20b", "--smoke", "--steps", "12",
+                "--islands", "2", "--local-steps", "2", "--batch", "4",
+                "--seq", "32", "--compress", "q8-topk",
+                "--robust-agg", "trimmed_mean", "--seed", "0"])
+    lines = capsys.readouterr().out.splitlines()
+    losses = [float(ln.split("loss=")[1].split()[0])
+              for ln in lines if "loss=" in ln]
+    assert len(losses) == 12
+    # the exchange path actually ran (tagged robust+compressed)
+    assert any("robust-exchange:trimmed_mean+q8-topk" in ln for ln in lines)
+    assert losses[-1] < losses[0], losses

@@ -171,3 +171,29 @@ def test_lengths_dtype_matches_device_positions():
     skewed = np.zeros(2, np.int64)
     skewed[0] = 2**31 + 5        # would wrap negative through int32
     assert int(skewed.astype(np.int32)[0]) != skewed[0]
+
+
+# -- spec'd caches through the continuous loop -----------------------------
+
+def test_serve_loop_ring_cache_token_identical():
+    """ServeLoop(cache_spec="ring:4/bf16") rebuilds the model around the
+    spec'd cache (params untouched) and reproduces the baseline stream
+    token-for-token -- the CacheSpec contract holding through slot reuse
+    and mid-flight joins, not just single-request decode."""
+    cfg = get_smoke_config("granite-20b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(9))
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (12, 7, 19)]
+
+    def drain(spec):
+        loop = ServeLoop(model, params, max_batch=2, max_len=128,
+                         cache_spec=spec)
+        if spec:
+            assert loop.model.cfg.cache_spec == spec
+        for i, p in enumerate(prompts):
+            loop.submit(Request(rid=i, prompt=p, max_new=6))
+        return {r.rid: r.out for r in loop.run_until_drained()}
+
+    assert drain("ring:4/bf16") == drain(None)
